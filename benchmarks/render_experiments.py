@@ -1,0 +1,61 @@
+"""Render the roofline table from results/dryrun_*.json into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> marker)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-2 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def render_table() -> str:
+    with open(os.path.join(ROOT, "results", "dryrun_singlepod.json")) as f:
+        cells = json.load(f)
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_mem^kern | t_coll (s) |"
+        " dom | mfu_serial | mfu^kern | useful | GB/dev | mb |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | "
+                         f"{c['status']} | — | — | — | — | — |")
+            continue
+        r = c["roofline"]
+        dom = {"t_compute_s": "COMP", "t_memory_s": "MEM",
+               "t_collective_s": "COLL"}[r["dominant"]]
+        mem = c.get("memory", {}).get("per_device_total_gb", "—")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_memory_kernelized_s'])} | "
+            f"{fmt(r['t_collective_s'])} | {dom} | "
+            f"{r['mfu_serial']:.3f} | {r.get('mfu_kernelized', 0):.3f} | "
+            f"{c['useful_flops_ratio']:.2f} | {mem} | "
+            f"{c.get('microbatch', '—')} |")
+    return "\n".join(lines)
+
+
+def main():
+    table = render_table()
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, marker + "\n\n" + table, 1)
+    with open(path, "w") as f:
+        f.write(text)
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Benchmark harness — one function per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only tableN]``
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention, where
+``derived`` carries the table's headline quantity (reproduction error,
+savings %, accuracy...).  Detailed tables are printed after the CSV and also
+written to results/bench_details.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ROWS = []
+DETAILS = {}
+
+
+def row(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, reps=3, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / reps * 1e6
+
+
+# ======================================================================
+def bench_table2():
+    """Hardware cost / feature comparison formulas (paper Table 2)."""
+    from repro.core.costmodel import table2_row
+    sweep = [(K, C, N, B) for K in (1, 8, 64) for C in (1, 4, 16)
+             for N in (256, 1024) for B in (16,)]
+
+    def run():
+        out = []
+        for K, C, N, B in sweep:
+            r = {m: table2_row(m, M=N, N=N, K=K, C=C, B=B, beta_t=2.0)
+                 for m in ("mzi", "crosslight", "holylight", "ours")}
+            out.append(((K, C, N, B), r))
+        return out
+
+    table, us = timed(run)
+    # headline: ours/holylight programming ratio at the largest scale point
+    (K, C, N, B), r = table[-1]
+    ratio = r["ours"]["programming_times"] / max(
+        r["holylight"]["programming_times"], 1)
+    DETAILS["table2"] = [
+        {"K": k, "C": c, "N": n, "B": b,
+         **{f"{m}_{q}": v[m][q] for m in v for q in
+            ("programming_times", "latency", "power")}}
+        for (k, c, n, b), v in table]
+    row("table2_hw_cost", us,
+        f"ours/holylight programming ratio @K={K} C={C}: {ratio:.2e}")
+
+
+def bench_table3():
+    """Energy/delay, 8x(256x256) matrices, tiles {64,256,1024} (Table 3)."""
+    from repro.core.costmodel import matrix_cost
+    paper = {64: (217190, 35.70, 77490, 12.50),
+             256: (54297, 9.68, 20197, 3.35),
+             1024: (13574, 3.17, 5874, 1.06)}
+
+    def run():
+        out = {}
+        for tile in paper:
+            no = matrix_cost(256, 256, tile, programs=8, passes=8)
+            re = matrix_cost(256, 256, tile, programs=1, passes=8)
+            out[tile] = (no.delay_ns, no.energy_uJ, re.delay_ns, re.energy_uJ)
+        return out
+
+    got, us = timed(run)
+    errs = []
+    det = []
+    for tile, want in paper.items():
+        g = got[tile]
+        for gv, wv in zip(g, want):
+            errs.append(abs(gv - wv) / wv)
+        det.append({"tile": tile,
+                    "delay_no_reuse_ns": g[0], "energy_no_reuse_uJ": g[1],
+                    "delay_reuse_ns": g[2], "energy_reuse_uJ": g[3],
+                    "paper": want,
+                    "energy_saving": 1 - g[3] / g[1],
+                    "latency_saving": 1 - g[2] / g[0]})
+    DETAILS["table3"] = det
+    row("table3_energy_delay", us,
+        f"max rel err vs paper: {max(errs):.4%}; "
+        f"latency saving @1024: {det[-1]['latency_saving']:.1%}; "
+        f"energy saving: {det[-1]['energy_saving']:.1%}")
+
+
+def bench_table4(quick=False):
+    """R&B performance across models: params, energy, accuracy (Table 4).
+
+    Param/energy columns are exact (our models + calibrated cost model);
+    accuracy uses the synthetic vision proxy (no CIFAR offline).
+    """
+    import jax
+    from repro.core.costmodel import (ZERO_COST, matrix_cost, stack_cost)
+    from repro.core.prm import ReuseConfig
+    from repro.models import paper_models as pm
+    from benchmarks._vision_task import train_classifier
+
+    steps = 60 if quick else 120
+    t0 = time.time()
+    det = []
+
+    # ---- MLP (layer-wise 1x6) ----
+    base = pm.MLPConfig()
+    shared = pm.MLPConfig(reuse=ReuseConfig(
+        num_basic=1, reuse_times=6,
+        transforms=("identity", "shuffle", "transpose")))
+    for tag, cfg in (("baseline", base), ("layer-wise 1x6", shared)):
+        p, sh = pm.mlp_init(jax.random.PRNGKey(0), cfg)
+        cost = stack_cost(pm.mlp_weight_shapes(cfg), sh.plan, tile=8)
+        fwd = lambda pp, x, c=cfg, s=sh: pm.mlp_forward(
+            pp, c, s, x.reshape(x.shape[0], -1)[:, :784])
+        _, acc = train_classifier(fwd, p, steps=steps, batch_size=64)
+        det.append({"model": "MLP", "arc": tag,
+                    "params_M": round(pm.param_count(p) / 1e6, 3),
+                    "energy_uJ": round(cost.energy_uJ, 2),
+                    "acc_proxy": round(acc, 3)})
+
+    # ---- MLP-Mixer (block-wise) ----
+    mixers = [("baseline", pm.MixerConfig()),
+              ("block-wise 1x8", pm.MixerConfig(reuse=ReuseConfig(
+                  num_basic=1, reuse_times=8,
+                  transforms=("identity", "shuffle", "transpose",
+                              "shuffle")))),
+              ("block-wise 2x4", pm.MixerConfig(reuse=ReuseConfig(
+                  num_basic=2, reuse_times=4,
+                  transforms=("identity", "shuffle", "transpose",
+                              "shuffle"))))]
+    for tag, cfg in mixers:
+        p, sh = pm.mixer_init(jax.random.PRNGKey(0), cfg)
+        cost = stack_cost(pm.mixer_weight_shapes(cfg), sh.plan, tile=8)
+        fwd = lambda pp, x, c=cfg, s=sh: pm.mixer_forward(pp, c, s, x)
+        _, acc = train_classifier(fwd, p, steps=steps, batch_size=64)
+        det.append({"model": "MLP-Mixer", "arc": tag,
+                    "params_M": round(pm.param_count(p) / 1e6, 3),
+                    "energy_uJ": round(cost.energy_uJ, 2),
+                    "acc_proxy": round(acc, 3)})
+
+    # ---- VGG-13 / ResNet-18: params + energy columns (conv training is
+    #      out of CPU budget; accuracy column documented as N/A) ----
+    for shared_flag in (False, True):
+        cfg = pm.VGGConfig(share_same_shape=shared_flag)
+        p = pm.vgg13_init(jax.random.PRNGKey(0), cfg)
+        shapes, programs = pm.vgg13_weight_shapes(cfg, shared_flag)
+        tot = ZERO_COST
+        for (r, c), prog in zip(shapes, programs):
+            tot = tot + matrix_cost(r, c, 8, programs=prog, passes=1)
+        det.append({"model": "VGG-13",
+                    "arc": "layer-wise shared" if shared_flag else "baseline",
+                    "params_M": round(pm.param_count(p) / 1e6, 2),
+                    "energy_uJ": round(tot.energy_uJ, 2),
+                    "acc_proxy": None})
+    for shared_flag in (False, True):
+        cfg = pm.ResNetConfig(share_within_stage=shared_flag)
+        p = pm.resnet18_init(jax.random.PRNGKey(0), cfg)
+        det.append({"model": "ResNet-18",
+                    "arc": "stage shared" if shared_flag else "baseline",
+                    "params_M": round(pm.param_count(p) / 1e6, 2),
+                    "energy_uJ": None, "acc_proxy": None})
+
+    DETAILS["table4"] = det
+    us = (time.time() - t0) * 1e6
+    mixer_base = next(d for d in det if d["model"] == "MLP-Mixer"
+                      and d["arc"] == "baseline")
+    mixer_24 = next(d for d in det if d["arc"] == "block-wise 2x4")
+    e_save = 1 - mixer_24["energy_uJ"] / mixer_base["energy_uJ"]
+    p_save = 1 - mixer_24["params_M"] / mixer_base["params_M"]
+    acc_drop = mixer_base["acc_proxy"] - mixer_24["acc_proxy"]
+    row("table4_rb_performance", us,
+        f"mixer 2x4: params -{p_save:.0%} energy -{e_save:.0%} "
+        f"acc_drop {acc_drop:+.3f} (paper: >=34% params, ~69% energy, "
+        f"<1% acc)")
+
+
+def bench_table5(quick=False):
+    """OBU ablation on the synthetic vision task (Table 5)."""
+    import jax
+    from repro.core.prm import ReuseConfig
+    from repro.models import paper_models as pm
+    from benchmarks._vision_task import train_classifier
+
+    steps = 60 if quick else 120
+    t0 = time.time()
+
+    def mixer_acc(reuse_cfg, seed=0):
+        cfg = pm.MixerConfig(blocks=8, reuse=reuse_cfg)
+        p, sh = pm.mixer_init(jax.random.PRNGKey(seed), cfg)
+        fwd = lambda pp, x, c=cfg, s=sh: pm.mixer_forward(pp, c, s, x)
+        _, acc = train_classifier(fwd, p, steps=steps, batch_size=64)
+        return acc, pm.param_count(p)
+
+    variants = {
+        "baseline(no reuse)": None,
+        "reuse only": ReuseConfig(num_basic=2, reuse_times=4,
+                                  transforms=("identity",)),
+        "reuse+shuffle": ReuseConfig(num_basic=2, reuse_times=4,
+                                     transforms=("identity", "shuffle")),
+        "reuse+transpose": ReuseConfig(num_basic=2, reuse_times=4,
+                                       transforms=("identity", "transpose")),
+        "reuse+shuffle+transpose": ReuseConfig(
+            num_basic=2, reuse_times=4,
+            transforms=("identity", "shuffle", "transpose",
+                        "shuffle_transpose")),
+    }
+    det = []
+    for tag, rc in variants.items():
+        acc, n = mixer_acc(rc)
+        det.append({"method": tag, "acc_proxy": round(acc, 3), "params": n})
+    DETAILS["table5"] = det
+    us = (time.time() - t0) * 1e6
+    base = det[0]["acc_proxy"]
+    ro = det[1]["acc_proxy"]
+    best_blend = max(d["acc_proxy"] for d in det[2:])
+    row("table5_obu_ablation", us,
+        f"reuse-only {ro:.3f} vs +blend best {best_blend:.3f} "
+        f"(baseline {base:.3f}); blend recovers "
+        f"{best_blend - ro:+.3f} (paper: +3.16% shuffle)")
+
+
+def bench_fig1():
+    """Energy-consumption breakdown: no-sharing vs R&B (paper Fig. 1)."""
+    from repro.core.costmodel import (baseline_stack_cost, energy_breakdown,
+                                      stack_cost)
+    from repro.core.prm import ReuseConfig, ReusePlan
+    from repro.models import paper_models as pm
+
+    cfg = pm.MixerConfig()
+    shapes = pm.mixer_weight_shapes(cfg)
+
+    def run():
+        plan_rb = ReusePlan.build(8, ReuseConfig(num_basic=2, reuse_times=4))
+        base = baseline_stack_cost(shapes, 8, tile=8)
+        rb = stack_cost(shapes, plan_rb, tile=8)
+        return (energy_breakdown(base), energy_breakdown(rb))
+
+    (b, r), us = timed(run)
+    DETAILS["fig1"] = {"no_sharing": b, "rb": r}
+    write_frac = (b["programming"] + b["calibration"]) / b["total"]
+    save = 1 - r["total"] / b["total"]
+    row("fig1_energy_breakdown", us,
+        f"write-phase fraction {write_frac:.0%} of baseline energy; "
+        f"R&B total saving {save:.0%}")
+
+
+def bench_roofline():
+    """Roofline terms per (arch x shape) from the dry-run artifacts."""
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "results",
+                                        "dryrun_singlepod.json"))
+    if not os.path.exists(path):
+        row("roofline_table", 0.0, "SKIPPED (run repro.launch.dryrun --all)")
+        return
+    with open(path) as f:
+        cells = json.load(f)
+    ok = [c for c in cells if c.get("status") == "ok"]
+    DETAILS["roofline"] = [
+        {"arch": c["arch"], "shape": c["shape"],
+         **{k: (f"{v:.3e}" if isinstance(v, float) else v)
+            for k, v in c["roofline"].items()}} for c in ok]
+    doms = {}
+    fracs = []
+    for c in ok:
+        d = c["roofline"]["dominant"]
+        doms[d] = doms.get(d, 0) + 1
+        fracs.append(c["roofline"]["roofline_fraction"])
+    row("roofline_table", 0.0,
+        f"{len(ok)} cells ok; dominant terms {doms}; "
+        f"median roofline fraction {sorted(fracs)[len(fracs)//2]:.2f}")
+
+
+# ======================================================================
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    benches = {
+        "table2": bench_table2,
+        "table3": bench_table3,
+        "table4": lambda: bench_table4(args.quick),
+        "table5": lambda: bench_table5(args.quick),
+        "fig1": bench_fig1,
+        "roofline": bench_roofline,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        fn()
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_details.json", "w") as f:
+        json.dump(DETAILS, f, indent=1, default=str)
+    print("\n# details written to results/bench_details.json")
+    for name, rows in DETAILS.items():
+        print(f"\n## {name}")
+        if isinstance(rows, list):
+            for r in rows[:44]:
+                print("  ", r)
+        else:
+            print("  ", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver example: a ~100M-parameter R&B language model
+trained for a few hundred steps through the full production stack (mesh,
+sharded params, remat scan, AdamW, checkpointing, preemption trap).
+
+The ~100M config is the default; ``--small`` selects a ~25M model that
+finishes in a few minutes on CPU.  On a real TPU slice the same script runs
+unchanged — the mesh builder picks up every device.
+
+Run:  PYTHONPATH=src python examples/train_rb_lm.py --small --steps 200
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.prm import ReuseConfig
+from repro.launch.train import run
+
+
+def lm_100m(reuse):
+    return ModelConfig(
+        name="rb-lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=16384,
+        compute_dtype="float32", reuse=reuse)
+
+
+def lm_25m(reuse):
+    return ModelConfig(
+        name="rb-lm-25m", family="dense", num_layers=8, d_model=384,
+        num_heads=6, num_kv_heads=2, d_ff=1024, vocab_size=8192,
+        compute_dtype="float32", reuse=reuse)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--no-reuse", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/rb_lm_ckpt")
+    args = ap.parse_args()
+    reuse = None if args.no_reuse else ReuseConfig(
+        num_basic=2 if args.small else 3,
+        reuse_times=4,
+        transforms=("identity", "shuffle", "transpose", "shuffle"),
+        shuffle_groups=8)
+    cfg = (lm_25m if args.small else lm_100m)(reuse)
+    n = sum(int(jax.numpy.prod(jax.numpy.array(s.shape)))
+            for s in jax.tree.leaves(
+                jax.eval_shape(lambda k: __import__(
+                    "repro.models.transformer",
+                    fromlist=["init_model"]).init_model(k, cfg)[0],
+                    jax.random.PRNGKey(0))))
+    print(f"model {cfg.name}: {n/1e6:.1f}M params "
+          f"({'shared' if reuse else 'baseline'})")
+    tcfg = TrainConfig(lr=1e-3, total_steps=args.steps,
+                       warmup_steps=max(10, args.steps // 20),
+                       checkpoint_every=max(50, args.steps // 4),
+                       checkpoint_dir=args.ckpt_dir)
+    _, _, losses = run(cfg, tcfg, batch=args.batch, seq=args.seq,
+                       steps=args.steps, task="copy")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

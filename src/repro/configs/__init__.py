@@ -1,0 +1,66 @@
+"""Config registry: ``--arch <id>`` resolution + per-(arch, shape) input specs.
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input of that grid cell — weak-type-correct, shardable, no device
+allocation — which is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, RB_PLANS, get_arch, rb, smoke_variant
+from repro.configs.base import (AudioConfig, MLAConfig, ModelConfig,
+                                MoEConfig, SHAPES, ShapeConfig, SSMConfig,
+                                TrainConfig, VisionConfig)
+
+__all__ = ["ARCHS", "RB_PLANS", "get_arch", "rb", "smoke_variant", "SHAPES",
+           "ShapeConfig", "ModelConfig", "MoEConfig", "MLAConfig",
+           "SSMConfig", "VisionConfig", "AudioConfig", "TrainConfig",
+           "input_specs", "batch_specs", "shape_supported"]
+
+
+def shape_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Grid-cell applicability (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "SKIP(full-attention: quadratic at 500k)"
+    return True, ""
+
+
+def _modality_extras(cfg: ModelConfig, batch: int, dtype) -> dict:
+    extras = {}
+    if cfg.family == "vlm":
+        v = cfg.vision
+        extras["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, v.num_image_tokens, v.d_vision), dtype)
+    if cfg.family == "audio":
+        a = cfg.audio
+        extras["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, a.num_frames, a.d_audio), dtype)
+    return extras
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the data batch of one grid cell."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = shape.global_batch
+    if shape.kind == "decode":
+        toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    else:
+        toks = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+    out = {"tokens": toks}
+    out.update(_modality_extras(cfg, B, dtype))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All step-function inputs for the cell (batch + caches for decode)."""
+    from repro.models import transformer as tfm
+    specs = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        dtype = jnp.dtype(cfg.compute_dtype)
+        specs["caches"] = jax.eval_shape(
+            lambda: tfm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                    dtype))
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return specs

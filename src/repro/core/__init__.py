@@ -1,0 +1,6 @@
+"""R&B core: the paper's contribution (PRM + OBU + photonic cost model)."""
+from repro.core.prm import Assignment, ReuseConfig, ReusePlan, no_reuse
+from repro.core.sharing import SharedStack, identity_stack, run_stack
+
+__all__ = ["Assignment", "ReuseConfig", "ReusePlan", "no_reuse",
+           "SharedStack", "identity_stack", "run_stack"]

@@ -1,0 +1,150 @@
+"""Opto-electronic Blend Unit (OBU) — paper §3.2.
+
+The OBU diversifies the *effective* weight seen by each reuse of a shared
+basic block, at ~zero hardware cost:
+
+  * **optical transpose** — light enters the MRR crossbar on the orthogonal
+    port, so the same array computes ``W.T @ x`` (paper Fig. 3).  On TPU this
+    is a ``dot_general`` dimension-number swap: no materialized transpose.
+  * **electronic shuffle** — the intermediate activations are permuted during
+    the mandatory O/E conversion.  Two flavors (paper §3.2):
+      1. *blocked random shuffle*: the flattened output is grouped into blocks
+         and the blocks are reordered by a fixed random index;
+      2. *channel-group shuffle*: channels are split into ``g`` groups and
+         interleaved (the classic ShuffleNet transform), i.e.
+         ``(.., C) -> (.., g, C/g) -> swap -> (.., C)``.
+
+All permutations are *static* (drawn once from a seed), so they compile to
+constant-index gathers and are fused by XLA; each has an exact inverse, which
+checkpointing and the property tests rely on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# permutation builders (static, numpy — these run at trace/config time)
+# --------------------------------------------------------------------------
+def group_shuffle_permutation(channels: int, groups: int) -> np.ndarray:
+    """Channel-group shuffle as an explicit permutation vector.
+
+    ``y[i] = x[perm[i]]`` reproduces reshape(g, C/g) -> transpose -> flatten.
+    """
+    if channels % groups != 0:
+        raise ValueError(f"channels {channels} not divisible by groups {groups}")
+    idx = np.arange(channels).reshape(groups, channels // groups)
+    return idx.T.reshape(-1).copy()
+
+
+def blocked_random_permutation(channels: int, block: int, seed: int) -> np.ndarray:
+    """Blocked random shuffle: permute whole blocks of ``block`` channels."""
+    if channels % block != 0:
+        raise ValueError(f"channels {channels} not divisible by block {block}")
+    nblk = channels // block
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(nblk)
+    idx = np.arange(channels).reshape(nblk, block)
+    return idx[order].reshape(-1).copy()
+
+
+def invert_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    return inv
+
+
+# --------------------------------------------------------------------------
+# jax-side application
+# --------------------------------------------------------------------------
+def apply_channel_permutation(x: jax.Array, perm) -> jax.Array:
+    """Permute the last axis of ``x`` by the static permutation ``perm``."""
+    perm = jnp.asarray(perm)
+    return jnp.take(x, perm, axis=-1)
+
+
+def group_shuffle(x: jax.Array, groups: int) -> jax.Array:
+    """Channel-group shuffle of the last axis (reshape/transpose form — the
+    permutation-vector form above is bit-identical; property-tested)."""
+    *lead, c = x.shape
+    if c % groups != 0:
+        raise ValueError(f"channels {c} not divisible by groups {groups}")
+    x = x.reshape(*lead, groups, c // groups)
+    x = jnp.swapaxes(x, -1, -2)
+    return x.reshape(*lead, c)
+
+
+def optical_transpose(w: jax.Array) -> jax.Array:
+    """Transpose of the last two dims — semantically the OBU's vertical-input
+    path.  At matmul use-sites prefer ``blend_dot(..., transpose=True)`` which
+    swaps contraction dims instead of materializing this."""
+    return jnp.swapaxes(w, -1, -2)
+
+
+# Output dtype of the TP matmuls.  fp32 keeps cross-shard partial sums in
+# full precision but makes every tensor-parallel collective 2x wider; bf16
+# is the standard Megatron-style trade (TPU MXU accumulation is fp32
+# internally either way).  Toggled per-experiment; see EXPERIMENTS.md §Perf.
+_ACCUM_FP32 = True
+
+
+def set_matmul_accum_fp32(value: bool) -> None:
+    global _ACCUM_FP32
+    _ACCUM_FP32 = value
+
+
+def _pref(x):
+    return jnp.float32 if (_ACCUM_FP32 or x.dtype == jnp.float32) else x.dtype
+
+
+def blend_dot(x: jax.Array, w: jax.Array, *, transpose: bool) -> jax.Array:
+    """``x @ w`` or ``x @ w.T`` without materializing the transpose.
+
+    ``x``: (..., k) ; ``w``: (k, n) (or (n, k) when transpose).  The transpose
+    variant contracts over ``w``'s *last* dim — exactly the optical path where
+    the same MRR array is illuminated from the orthogonal port.
+    """
+    if transpose:
+        if w.shape[-1] != x.shape[-1]:
+            raise ValueError(f"transpose blend needs square-compatible dims, "
+                             f"got x{x.shape} w{w.shape}")
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=_pref(x)).astype(x.dtype)
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=_pref(x)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# transform resolution for a ReusePlan
+# --------------------------------------------------------------------------
+def build_transform_tables(channels: int, reuse_times: int, transforms,
+                           groups: int, block: int, seed: int) -> np.ndarray:
+    """Per-reuse-step channel permutation table, shape (T, channels).
+
+    Step ``t`` applies ``perm[t]`` to the *activations entering* reuse ``t``.
+    Identity / transpose-only steps get the identity permutation (transpose is
+    handled at the weight use-site, not here).
+    """
+    table = np.tile(np.arange(channels), (reuse_times, 1))
+    for t in range(reuse_times):
+        name = transforms[t % len(transforms)] if transforms else "identity"
+        if name in ("shuffle", "shuffle_transpose"):
+            if block and block > 0:
+                table[t] = blocked_random_permutation(channels, block, seed + t)
+            else:
+                table[t] = group_shuffle_permutation(channels, groups)
+    return table
+
+
+def transpose_flags(reuse_times: int, transforms) -> np.ndarray:
+    """Boolean per-reuse-step table: does step ``t`` use the transposed path."""
+    flags = np.zeros((reuse_times,), dtype=bool)
+    for t in range(reuse_times):
+        name = transforms[t % len(transforms)] if transforms else "identity"
+        flags[t] = name in ("transpose", "shuffle_transpose")
+    return flags

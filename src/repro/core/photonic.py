@@ -1,0 +1,140 @@
+"""Faithful MRR-crossbar simulator — paper §3.4.
+
+Models the photonic MVM path end-to-end:
+
+  1. weights normalized to [-1, 1];
+  2. **offset-matrix decomposition** (paper eq. 6): ``W' = W/2 + W0`` with the
+     uniform offset ``W0 = 0.5``; hardware computes ``W'x`` and the 1xN row
+     ``W0 x = 0.5 * sum(x)``, and the full-range result is recovered as
+     ``W x = 2 (W' x - W0 x)``.  Because ``W0`` is uniform, only a single
+     1xN MRR row is ever programmed for it;
+  3. W8A8 quantization (paper §4: weights *and* activations, per-tensor scale
+     for activations, per-output-channel scale for weights — BRECQ-style PTQ);
+  4. tiling onto ``tile x tile`` MRR crossbars (8x8 is the realistic photonic
+     scale; the TPU kernels use 128-aligned tiles instead — see DESIGN.md);
+  5. optional per-write Gaussian noise modelling thermal-calibration error and
+     aging-induced resonance drift (§4.2.3).
+
+Everything here is pure jnp and doubles as the oracle for the
+``kernels/photonic_mvm`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicConfig:
+    tile: int = 8              # MRR crossbar is tile x tile (paper: 8x8)
+    weight_bits: int = 8       # W8
+    act_bits: int = 8          # A8
+    write_noise_sigma: float = 0.0   # std of programming error, in weight LSBs
+    offset_value: float = 0.5  # the uniform W0
+
+
+# ------------------------------------------------------------------ quantize
+def quantize_symmetric(x: jax.Array, bits: int, axis=None):
+    """Symmetric uniform quantization; returns (q_int, scale).
+
+    ``axis=None`` -> per-tensor scale; otherwise per-slice along ``axis``.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x)) if axis is None else (
+        jnp.max(jnp.abs(x), axis=axis, keepdims=True))
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ------------------------------------------------- offset decomposition (eq 6)
+def offset_decompose(w_norm: jax.Array, offset: float = 0.5):
+    """``w_norm`` in [-1,1] -> non-negative ``w_prime`` in [0,1] (eq. 6)."""
+    w_prime = 0.5 * w_norm + offset
+    return w_prime
+
+
+def offset_recompose_mvm(wp_x: jax.Array, x_sum: jax.Array,
+                         offset: float = 0.5) -> jax.Array:
+    """Recover full-range MVM: ``W x = 2 (W' x - offset * sum(x))``."""
+    return 2.0 * (wp_x - offset * x_sum)
+
+
+# ------------------------------------------------------------------ simulator
+def normalize_weights(w: jax.Array):
+    """Per-output-channel normalization of ``w`` (k, n) into [-1, 1]."""
+    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-8)
+    return w / wmax, wmax
+
+
+def mrr_tiles(rows: int, cols: int, tile: int) -> int:
+    """Number of tile x tile crossbars a (rows, cols) weight occupies."""
+    return int(np.ceil(rows / tile) * np.ceil(cols / tile))
+
+
+def photonic_matmul(x: jax.Array, w: jax.Array,
+                    cfg: PhotonicConfig = PhotonicConfig(),
+                    noise_key: jax.Array | None = None) -> jax.Array:
+    """Simulated photonic ``x @ w`` for x:(..., k), w:(k, n).
+
+    The computation is numerically identical to the hardware dataflow:
+    quantize -> offset-shift to non-negative MRR transmissions -> per-tile
+    optical MVM of ``W'`` plus the shared ``W0`` row -> BPD subtraction ->
+    TIA rescale.  With ``write_noise_sigma == 0`` this equals W8A8 matmul
+    exactly (property-tested); the Pallas kernel must match it bit-for-bit
+    in fp32 accumulation.
+    """
+    k, n = w.shape
+    # --- W8 per-output-channel ---
+    w_norm, wmax = normalize_weights(w)
+    qmax = 2 ** (cfg.weight_bits - 1) - 1
+    wq = jnp.round(w_norm * qmax) / qmax                     # quantized, [-1,1]
+    if cfg.write_noise_sigma > 0.0 and noise_key is not None:
+        noise = jax.random.normal(noise_key, wq.shape) * (
+            cfg.write_noise_sigma / qmax)
+        wq = jnp.clip(wq + noise, -1.0, 1.0)
+    w_prime = offset_decompose(wq, cfg.offset_value)         # [0, 1] MRR domain
+    # --- A8 per-tensor ---
+    xq, xscale = quantize_symmetric(x, cfg.act_bits)
+    xf = dequantize(xq, xscale)
+    # --- optical MVM: W'x and the 1xN offset row W0 x ---
+    wp_x = jnp.einsum("...k,kn->...n", xf, w_prime,
+                      preferred_element_type=jnp.float32)
+    x_sum = jnp.sum(xf, axis=-1, keepdims=True)
+    y = offset_recompose_mvm(wp_x, x_sum, cfg.offset_value)
+    # --- TIA gain undoes the per-channel weight normalization ---
+    return (y * wmax.reshape(1, -1)).astype(x.dtype) if x.ndim == 1 else (
+        y * wmax).astype(x.dtype)
+
+
+def w8a8_matmul_reference(x: jax.Array, w: jax.Array,
+                          cfg: PhotonicConfig = PhotonicConfig()) -> jax.Array:
+    """Plain W8A8 matmul (no photonic dataflow) — equality target for
+    ``photonic_matmul`` with zero write noise."""
+    w_norm, wmax = normalize_weights(w)
+    qmax = 2 ** (cfg.weight_bits - 1) - 1
+    wq = jnp.round(w_norm * qmax) / qmax * wmax
+    xq, xscale = quantize_symmetric(x, cfg.act_bits)
+    xf = dequantize(xq, xscale)
+    return jnp.einsum("...k,kn->...n", xf, wq,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mrr_write_count(w_shape, tile: int) -> int:
+    """Individual MRR programmings needed to load one (k, n) weight."""
+    k, n = w_shape
+    return int(k * n)  # every element is one ring; tiling determines latency
+
+
+def crossbar_utilization(w_shape, tile: int) -> float:
+    k, n = w_shape
+    used = k * n
+    alloc = mrr_tiles(k, n, tile) * tile * tile
+    return used / alloc

@@ -1,0 +1,208 @@
+"""Shared-stack execution — PRM (§3.1) + OBU (§3.2) mapped onto jax.lax.scan.
+
+A stack of ``depth = R*T`` logical blocks is executed as
+
+    scan over R physical blocks            (params are scan xs)
+      unrolled loop over T reuses          (params loop-INVARIANT -> weights
+                                            stay resident; OBU transform per t)
+
+The unrolled inner loop keeps every OBU transform *static* (constant-index
+gathers, dot_general dimension swaps), so XLA sees a fixed program whose HLO
+size is O(T), not O(R*T).  This is the TPU-native realization of the paper's
+write-once / reuse-T-times schedule: HBM weight streaming and gradient
+all-reduce volume drop by the reuse factor.
+
+Per-logical-layer state that is *not* shared (KV caches, SSM states) is passed
+as scan xs with leading dims [R, T, ...].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import obu
+from repro.core.prm import ReuseConfig, ReusePlan, no_reuse
+
+
+def tree_index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedStack:
+    """Static schedule for one stack: plan + resolved OBU tables."""
+
+    plan: ReusePlan
+    perm_table: np.ndarray          # (T, channels) int32
+    inv_perm_table: np.ndarray      # (T, channels) int32
+    transpose_flags: np.ndarray     # (T,) bool
+    shuffle_active: tuple           # (T,) of python bool — skip identity gathers
+
+    @staticmethod
+    def build(depth: int, channels: int,
+              cfg: ReuseConfig | None) -> "SharedStack":
+        plan = ReusePlan.build(depth, cfg)
+        c = plan.config
+        perm = obu.build_transform_tables(
+            channels, c.reuse_times, c.transforms, c.shuffle_groups,
+            c.shuffle_block, c.seed)
+        inv = np.stack([obu.invert_permutation(p) for p in perm])
+        tf = obu.transpose_flags(c.reuse_times, c.transforms)
+        active = tuple(bool((perm[t] != np.arange(channels)).any())
+                       for t in range(c.reuse_times))
+        return SharedStack(plan=plan, perm_table=perm, inv_perm_table=inv,
+                           transpose_flags=tf, shuffle_active=active)
+
+    @property
+    def num_physical(self) -> int:
+        return self.plan.num_physical
+
+    @property
+    def reuse_times(self) -> int:
+        return self.plan.reuse_times
+
+
+def identity_stack(depth: int, channels: int) -> SharedStack:
+    return SharedStack.build(depth, channels, no_reuse(depth))
+
+
+# ---------------------------------------------------------------------------
+# stack runner
+# ---------------------------------------------------------------------------
+BlockFn = Callable[..., tuple]
+# block_fn(params_r, x, cache_t, aux, *, transpose: bool, reuse_index: int)
+#   -> (x, new_cache_t, aux)     where cache_t may be None; aux is a scalar
+#   accumulator (e.g. MoE load-balance loss) threaded through the scan.
+
+
+def _delta_update(cache_leaf, delta, r, t, pos):
+    """Write a block_fn cache update back into the carried [R, T, ...] buffer.
+
+    If the update has the slice's full shape it replaces the [r, t] slice
+    (SSM state, conv tail).  If exactly one dim is 1 where the cache has L
+    (a one-token KV delta), only that token is written at ``pos`` — this is
+    what keeps decode HBM traffic at ~1x cache read + epsilon write."""
+    slice_shape = cache_leaf.shape[2:]
+    up = delta.astype(cache_leaf.dtype)
+    if tuple(up.shape) == tuple(slice_shape):
+        idx = (r, t) + (0,) * len(slice_shape)
+        return jax.lax.dynamic_update_slice(cache_leaf, up[None, None], idx)
+    diff = [i for i, (a, b) in enumerate(zip(up.shape, slice_shape))
+            if a != b]
+    assert len(diff) == 1 and up.shape[diff[0]] == 1, (
+        f"cache delta {up.shape} incompatible with slice {slice_shape}")
+    idx = [r, t] + [0] * len(slice_shape)
+    idx[2 + diff[0]] = pos
+    return jax.lax.dynamic_update_slice(cache_leaf, up[None, None],
+                                        tuple(idx))
+
+
+def run_stack(block_fn: BlockFn, params: Any, x: jax.Array,
+              shared: SharedStack, cache: Any = None, aux0=0.0,
+              unroll_scan: int = 1, remat: bool = False,
+              decode_pos=None):
+    """Run a PRM-shared stack.
+
+    Args:
+      block_fn: applies ONE basic block (may itself contain several layers —
+        block-wise granularity).  Receives a *static* ``transpose`` flag and
+        ``reuse_index``.
+      params:  pytree with leading axis R (= shared.num_physical).
+      x:       activations (..., channels).
+      shared:  the static schedule.
+      cache:   optional pytree with leading axes [R, T, ...] of per-logical-
+        layer state (KV / SSM).  Returned updated with the same shape.
+      remat:   checkpoint each physical block — only the R block inputs are
+        saved; the T reuses are recomputed in backward against the already-
+        resident shared weights (the natural PRM remat boundary).
+      decode_pos: when set (decode mode), the cache travels as the scan
+        CARRY — XLA aliases loop carries in place — and block_fn cache
+        returns are treated as deltas written via dynamic_update_slice
+        (one token for KV caches, full slice for SSM state).
+
+    Returns (x, new_cache, aux).
+    """
+    T = shared.reuse_times
+    have_cache = cache is not None
+    aux0 = jnp.asarray(aux0, dtype=jnp.float32)
+
+    def one_reuse(t):
+        def f(h, aux, p_r, c_t):
+            if shared.shuffle_active[t]:
+                h = obu.apply_channel_permutation(h, shared.perm_table[t])
+            h, c_t, aux = block_fn(p_r, h, c_t, aux,
+                                   transpose=bool(shared.transpose_flags[t]),
+                                   reuse_index=t)
+            return h, aux, c_t
+        return f
+
+    # with remat, checkpoint at *reuse* granularity: the backward working
+    # set stays one logical block regardless of T (the shared weights are
+    # already resident when recomputing — the natural PRM remat boundary)
+    reuse_fns = [jax.checkpoint(one_reuse(t)) if remat else one_reuse(t)
+                 for t in range(T)]
+
+    def body(h, aux, p_r, cache_r):
+        new_cache = []
+        for t in range(T):
+            c_t = tree_index(cache_r, t) if have_cache else None
+            h, aux, c_t = reuse_fns[t](h, aux, p_r, c_t)
+            new_cache.append(c_t)
+        return h, aux, (new_cache if have_cache else None)
+
+    if have_cache and decode_pos is not None:
+        # ---- decode: cache as in-place carry, delta writes ----
+        R = shared.num_physical
+
+        def outer_carry(carry, xs):
+            h, aux, cache_all = carry
+            p_r, r = xs
+            cache_r = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, r, 0,
+                                                       keepdims=False),
+                cache_all)
+            h, aux, updates = body(h, aux, p_r, cache_r)
+            for t, up_t in enumerate(updates):
+                cache_all = jax.tree.map(
+                    lambda c, u: _delta_update(c, u, r, t, decode_pos),
+                    cache_all, up_t)
+            return (h, aux, cache_all), None
+
+        (x, aux, cache), _ = jax.lax.scan(
+            outer_carry, (x, aux0, cache), (params, jnp.arange(R)),
+            unroll=unroll_scan)
+        return x, cache, aux
+
+    def outer(carry, xs):
+        h, aux = carry
+        p_r, cache_r = xs
+        h, aux, out_cache = body(h, aux, p_r, cache_r)
+        return (h, aux), (tree_stack(out_cache)
+                          if out_cache is not None else None)
+
+    (x, aux), new_cache = jax.lax.scan(outer, (x, aux0), (params, cache),
+                                       unroll=unroll_scan)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# parameter bookkeeping
+# ---------------------------------------------------------------------------
+def stacked_init(init_one: Callable[[jax.Array], Any], key: jax.Array,
+                 num_physical: int) -> Any:
+    """Initialize R independent copies of a block's params, stacked on axis 0."""
+    keys = jax.random.split(key, num_physical)
+    return jax.vmap(init_one)(keys)
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

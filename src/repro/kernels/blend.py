@@ -1,0 +1,66 @@
+"""OBU blend Pallas kernel — blocked channel shuffle fused with bias + ReLU.
+
+The paper's OBU performs the shuffle "for free" during the mandatory O/E
+conversion.  The TPU-native equivalent: a *blocked* permutation whose block
+size is a multiple of the 128-wide lane dimension is pure **grid index
+remapping** — the input BlockSpec's ``index_map`` reads block ``perm[j]``
+while writing block ``j``, so the data movement happens inside the copy that
+a fused bias+activation epilogue needed anyway.  Zero extra passes over HBM.
+
+(The fine-grained channel-group shuffle keeps its XLA gather form in
+``core.obu``; this kernel covers the paper's *blocked random shuffle* flavor.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(perm_ref, x_ref, b_ref, o_ref, *, activation: str):
+    y = x_ref[...] + b_ref[...]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "silu":
+        y = y * jax.nn.sigmoid(y)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def blend_shuffle(x, bias, block_perm, *, block=128, bm=128,
+                  activation="relu", interpret=True):
+    """y[:, j*block:(j+1)*block] = act(x[:, perm[j]*block:...] + bias[...]).
+
+    x: (M, C) with C == len(block_perm) * block; bias: (C,) added *after*
+    the shuffle (indexed by output position).  ``block_perm`` arrives via
+    TPU scalar prefetch so the input BlockSpec's index map can read it —
+    the shuffle is realized purely as grid index remapping.
+    """
+    M, C = x.shape
+    nblk = C // block
+    perm = np.asarray(block_perm, dtype=np.int32)
+    assert sorted(perm.tolist()) == list(range(nblk)), \
+        "block_perm must be a permutation"
+    assert M % bm == 0, f"rows {M} must divide bm {bm}"
+    grid = (M // bm, nblk)
+    gridspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # input block j is read from source block perm[j]: the shuffle IS
+            # the index map.
+            pl.BlockSpec((bm, block), lambda i, j, perm_ref: (i, perm_ref[j])),
+            pl.BlockSpec((1, block), lambda i, j, perm_ref: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, block), lambda i, j, perm_ref: (i, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid_spec=gridspec,
+        out_shape=jax.ShapeDtypeStruct((M, C), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(perm), x, bias.reshape(1, C))
+    return out

@@ -1,0 +1,75 @@
+"""Blocked (flash-style) causal attention Pallas kernel — prefill path.
+
+Online-softmax attention over (bq, bk) tiles with fp32 running max / sum /
+accumulator in VMEM scratch.  Grid: (batch*heads, S/bq, S/bk), K innermost.
+This is the compute hot-spot of the ``prefill_32k`` cells; the kernel keeps
+the S x S score matrix out of HBM entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            nk: int, bq: int, bk: int, scale: float, causal: bool):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                   # (bq, hd)
+    k = k_ref[...].astype(jnp.float32)                   # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qb = pl.program_id(1)
+        qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qi >= kj, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128, interpret=True):
+    """q, k, v: (BH, S, hd) — batch*heads flattened.  Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = 1.0 / (hd ** 0.5)
+    grid = (BH, S // bq, S // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2], bq=bq, bk=bk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+real TPU backend they lower natively.  All shape plumbing (quantization,
+padding, head flattening) lives here so callers stay tensor-shaped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.photonic import normalize_weights, quantize_symmetric
+from repro.kernels import blend as _blend
+from repro.kernels import flash_attention as _fa
+from repro.kernels import photonic_mvm as _pm
+from repro.kernels import ssd as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def photonic_matmul_kernel(x, w, *, bm=128, bk=128, bn=128):
+    """Full photonic W8A8 path: quantize -> offset-decomposed Pallas MVM."""
+    qmax = 127.0
+    w_norm, wmax = normalize_weights(w)
+    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
+    xq, xscale = quantize_symmetric(x, 8)
+    lead = x.shape[:-1]
+    x2 = xq.reshape(-1, x.shape[-1])
+    y = _pm.photonic_mvm(x2, wq, xscale, wmax.reshape(-1),
+                         bm=bm, bk=bk, bn=bn, qmax=qmax,
+                         interpret=_interpret())
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+
+def blend_shuffle(x, bias, block_perm, *, block=128, activation="relu"):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _blend.blend_shuffle(x2, bias, block_perm, block=block,
+                             bm=min(128, x2.shape[0]),
+                             activation=activation,
+                             interpret=_interpret())
+    return y.reshape(*lead, x.shape[-1])
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    """q,k,v: (B, S, H, hd) MHA (equal head counts). Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    o = _fa.flash_attention(qf, kf, vf, causal=causal,
+                            bq=min(bq, S), bk=min(bk, S),
+                            interpret=_interpret())
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def ssd_chunk(x, dA, B, C):
+    return _ssd.ssd_chunk(x, dA, B, C, interpret=_interpret())

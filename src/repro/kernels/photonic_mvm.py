@@ -1,0 +1,89 @@
+"""Photonic MVM Pallas kernel — the paper's compute path, TPU-native.
+
+Implements W8A8 matmul with the **offset-matrix negative-weight
+decomposition** (paper eq. 6) inside the kernel:
+
+    y = 2 * (x_f @ W'  -  0.5 * sum_k x_f)  * w_scale * x_scale
+    W' = W_q / (2*qmax) + 0.5                (MRR transmission domain [0, 1])
+
+The crossbar tile of the paper (8x8, crosstalk-limited) becomes an MXU-aligned
+(bm, bk, bn) VMEM block (DESIGN.md §2): one grid step "programs" a weight tile
+into VMEM and streams an activation block through it; the rank-1 offset row
+(``0.5 * sum(x)``) is tracked in a second fp32 scratch accumulator, exactly
+like the hardware's shared 1xN W0 crossbar row.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; fp32 accumulation in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xq_ref, wq_ref, xs_ref, ws_ref, o_ref, acc_ref, xsum_ref, *,
+            nk: int, qmax: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xsum_ref[...] = jnp.zeros_like(xsum_ref)
+
+    xf = xq_ref[...].astype(jnp.float32)                 # A8 block
+    w_prime = wq_ref[...].astype(jnp.float32) / (2.0 * qmax) + 0.5
+    acc_ref[...] += jnp.dot(xf, w_prime,
+                            preferred_element_type=jnp.float32)
+    xsum_ref[...] += jnp.sum(xf, axis=1, keepdims=True)  # offset row W0
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        y = 2.0 * (acc_ref[...] - 0.5 * xsum_ref[...])   # BPD subtraction
+        scale = xs_ref[0, 0] * ws_ref[...]               # TIA gain
+        o_ref[...] = (y * scale).astype(o_ref.dtype)
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "qmax",
+                                             "interpret", "out_dtype"))
+def photonic_mvm(xq, wq, x_scale, w_scale, *, bm=128, bk=128, bn=128,
+                 qmax=127.0, interpret=True, out_dtype=jnp.float32):
+    """xq: (M, K) int8; wq: (K, N) int8 (symmetric, per-column scale);
+    x_scale: scalar; w_scale: (N,).  Returns (M, N) ``out_dtype``."""
+    M, K = xq.shape
+    K2, N = wq.shape
+    assert K == K2
+    xq_p = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+    wq_p = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+    ws_p = _pad_to(w_scale.reshape(1, N), bn, 1)
+    Mp, Kp = xq_p.shape
+    Np = wq_p.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2], qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        interpret=interpret,
+    )(xq_p, wq_p, jnp.reshape(x_scale, (1, 1)).astype(jnp.float32),
+      ws_p.astype(jnp.float32))
+    return out[:M, :N]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def photonic_mvm_ref(xq, wq, x_scale, w_scale, qmax=127.0):
+    """Direct dequantized matmul — must equal the offset-decomposed kernel
+    bit-for-bit in fp32 (the decomposition is exact, paper eq. 6)."""
+    xf = xq.astype(jnp.float32) * x_scale
+    wf = wq.astype(jnp.float32) / qmax * w_scale.reshape(1, -1)
+    return jnp.dot(xf, wf, preferred_element_type=jnp.float32)
+
+
+def blend_shuffle_ref(x, bias, block_perm, block, activation="relu"):
+    M, C = x.shape
+    perm = np.asarray(block_perm)
+    idx = (perm[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+    y = x[:, idx] + bias.reshape(1, C)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "silu":
+        y = y * jax.nn.sigmoid(y)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dA, B, C):
+    """Oracle for the intra-chunk SSD kernel (matches models.ssm algebra)."""
+    b, nc, L, H, P = x.shape
+    x = x.astype(jnp.float32)
+    dA = dA.astype(jnp.float32)
+    Bh = B.astype(jnp.float32)
+    Ch = C.astype(jnp.float32)
+    cs = jnp.cumsum(dA, axis=-1)                        # (b,nc,H,L)
+    seg = cs[..., :, None] - cs[..., None, :]
+    ii = np.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    Lmat = jnp.exp(jnp.where(mask, seg, -jnp.inf))
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)
+    y = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Lmat, x)
+    decay = jnp.exp(cs[..., -1:] - cs)                  # (b,nc,H,L)
+    st = jnp.einsum("bclhn,bchl,bclhp->bchnp", Bh, decay, x)
+    return y, st

@@ -1,0 +1,402 @@
+"""Dry-run analysis: roofline inputs from the compiled artifact.
+
+Three data sources, each used where it is trustworthy (EXPERIMENTS.md §Method):
+
+1. **Analytic FLOPs** — ``compiled.cost_analysis()`` counts a ``while`` body
+   once, so scan-based stacks under-report by the trip count (verified
+   empirically).  We therefore compute the compute term from model math
+   (the standard MFU accounting): 6/2 x active-params x tokens, plus
+   attention-context, SSD-chunk and MoE-dispatch terms.
+
+2. **Analytic HBM bytes** — same while-body limitation; we model weight /
+   optimizer / gradient / activation / KV-cache traffic explicitly.
+
+3. **Collective bytes from the optimized HLO**, with while-loop
+   **trip-count correction**: the HLO text is parsed into computations;
+   every collective's result bytes are multiplied by the product of the
+   trip counts of its enclosing while loops (trip = the s32 bound constant
+   in the loop condition).  This is the *real* compiled collective
+   schedule, which no analytic model can guess.
+
+Raw ``cost_analysis`` numbers are reported alongside for transparency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_HDR_NAME = re.compile(r"^%?([\w\.\-]+)\s*\(")
+
+
+def _comp_header(line: str):
+    """Parse an HLO computation header line -> (name, is_entry) or None.
+
+    Headers look like ``%name (p: (s32[], f32[2,3]{1,0})) -> f32[] {`` —
+    parameter lists nest parentheses (tuple types), so a simple regex over
+    the whole header breaks; we only need the leading name token."""
+    s = line.strip()
+    if not s.endswith("{") or "->" not in s:
+        return None
+    is_entry = s.startswith("ENTRY ")
+    if is_entry:
+        s = s[len("ENTRY "):].lstrip()
+    m = _HDR_NAME.match(s)
+    if not m:
+        return None
+    return m.group(1), is_entry
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> dict:
+    """computation name -> body text (optimized HLO module)."""
+    comps = {}
+    cur_name, buf, entry = None, [], None
+    for line in hlo.splitlines():
+        if cur_name is None:
+            hdr = _comp_header(line)
+            if hdr:
+                cur_name, is_entry = hdr
+                if is_entry:
+                    entry = cur_name
+                buf = []
+        else:
+            if line.strip() == "}":
+                comps[cur_name] = "\n".join(buf)
+                cur_name = None
+            else:
+                buf.append(line)
+    comps["__entry__"] = entry
+    return comps
+
+
+def _trip_count(cond_text: str) -> int:
+    """Fallback: constant trip count from a while condition (largest s32
+    constant — the loop bound after constant sinking)."""
+    consts = [int(m) for m in re.findall(r"s32\[\]\s+constant\((\d+)\)",
+                                         cond_text)]
+    return max(consts) if consts else 1
+
+
+def _whiles_in(text: str):
+    """Yield (condition, body, trip_hint) per while op.  Trip count comes
+    from XLA's ``backend_config known_trip_count`` when present."""
+    for line in text.splitlines():
+        if " while(" not in line:
+            continue
+        mc = re.search(r"condition=%?([\w\.\-]+)", line)
+        mb = re.search(r"body=%?([\w\.\-]+)", line)
+        if not (mc and mb):
+            continue
+        mt = _TRIP_RE.search(line)
+        yield mc.group(1), mb.group(1), (int(mt.group(1)) if mt else None)
+
+
+def _computation_multipliers(comps: dict, entry: str | None) -> dict:
+    """Execution-count multiplier per computation, following while loops
+    only (fusion computations are inlined, so excluding them from the walk
+    keeps fusion internals out of the traffic model)."""
+    mult: dict = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for cond, body, trip_hint in _whiles_in(comps[name]):
+            trip = trip_hint or _trip_count(comps.get(cond, ""))
+            visit(body, m * trip)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        mult = {k: 1.0 for k in comps}
+    return mult
+
+
+def collective_bytes_trip_corrected(hlo: str) -> dict:
+    """Per-device collective bytes, scaled by enclosing while trip counts."""
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry__")
+    mult = _computation_multipliers(comps, entry)
+    out = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for name, m in mult.items():
+        for line in comps[name].splitlines():
+            s = line.strip()
+            eq = s.find(" = ")
+            if eq < 0:
+                continue
+            rhs = s[eq + 3:]
+            mm = re.match(r"((?:\([^)]*\))|(?:[a-z0-9_\[\]{},.: ]+?))\s*"
+                          r"([a-z\-]+)\(", rhs)
+            if not mm:
+                continue
+            op = mm.group(2)
+            kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+            if kind:
+                out[kind] += _shape_bytes(mm.group(1)) * m
+                counts[kind] += 1
+    return {"bytes": {k: int(v) for k, v in out.items()},
+            "counts": counts, "total_bytes": int(sum(out.values()))}
+
+
+_SKIP_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "iota")
+
+
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+
+def _is_score_shape(shape_text: str, seq_len: int, exclude=()) -> bool:
+    """Attention-score-shaped buffer: trailing dim a small multiple of the
+    kv length (heads-flattened layouts included) and a wide query dim
+    before it.  These are exactly the buffers the Pallas flash kernel keeps
+    VMEM-resident (never written to HBM) — the `kernelized` memory term
+    excludes them.  ``exclude`` lists model dims (d_model, d_ff, vocab)
+    that must never be mistaken for a score axis."""
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return False
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    if len(dims) < 2 or dims[-2] < 1024:
+        return False
+    last = dims[-1]
+    if last in exclude:
+        return False
+    return last >= seq_len and last % seq_len == 0 and last // seq_len <= 128
+
+
+def hbm_traffic_trip_corrected(hlo: str, seq_len: int | None = None,
+                               score_exclude_dims=()):
+    """Per-device modeled HBM traffic: for every executed instruction
+    (while-trip-scaled), result bytes + resolved operand bytes.
+
+    Fusion internals are excluded (fusion computations are never walked).
+    Slicing reads are special-cased — a (fused) dynamic-slice/gather reads
+    only the sliced region, and a (fused) dynamic-update-slice writes only
+    the update region in place — otherwise scan-over-layers models would
+    appear to re-read the whole stacked weight array every step."""
+    comps = split_computations(hlo)
+    entry = comps.pop("__entry__")
+    mult = _computation_multipliers(comps, entry)
+    slicing_comp = {name: bool(re.search(r"\b(dynamic-slice|gather)\(", t))
+                    for name, t in comps.items()}
+    dus_comp = {name: "dynamic-update-slice(" in t
+                for name, t in comps.items()}
+    score_traffic = 0.0
+    carry_copy_traffic = 0.0   # in-loop `copy` ops: loop-carry aliasing
+                               # artifacts of the CPU backend (TPU aliases
+                               # while carries in place)
+    # name -> result bytes, across all computations
+    name_bytes: dict = {}
+    op_line = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+    for text in comps.values():
+        for line in text.splitlines():
+            m = op_line.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            # result shape is the text before the op name
+            mm = re.match(r"((?:\([^)]*\))|(?:[a-z0-9_\[\]{},.: ]+?))\s*"
+                          r"[a-z][a-z0-9\-]*\(", rhs)
+            if mm:
+                name_bytes[m.group(1)] = _shape_bytes(mm.group(1))
+    total = 0.0
+    opnd_re = re.compile(r"%([\w\.\-]+)")
+    for cname, m in mult.items():
+        for line in comps[cname].splitlines():
+            lm = op_line.match(line)
+            if not lm:
+                continue
+            rhs = lm.group(2)
+            mm = re.match(r"((?:\([^)]*\))|(?:[a-z0-9_\[\]{},.: ]+?))\s*"
+                          r"([a-z][a-z0-9\-]*)\(", rhs)
+            if not mm:
+                continue
+            op = mm.group(2)
+            if op in _SKIP_OPS or op == "while":
+                continue
+            # operands live in the first paren group only (calls=/metadata=
+            # sections reference computations, not buffers)
+            start = rhs.find("(")
+            end = rhs.find(")", start)
+            args = rhs[start + 1:end] if start >= 0 and end > start else ""
+            opnds = opnd_re.findall(args)
+            res_bytes = _shape_bytes(mm.group(1))
+            called = None
+            if op == "fusion":
+                cm = _CALLS_RE.search(rhs)
+                called = cm.group(1) if cm else None
+            if op in ("dynamic-slice", "slice", "gather") or (
+                    called and slicing_comp.get(called)):
+                # reads only the sliced region: read + write = 2 x result,
+                # plus any small (non-sliced) operands
+                traffic = 2 * res_bytes + sum(
+                    b for o in opnds
+                    if (b := name_bytes.get(o, 0)) < 2 * res_bytes)
+            elif op == "dynamic-update-slice" or (
+                    called and dus_comp.get(called)):
+                # in-place: read + write of the update region only (the
+                # aliased big buffer is untouched outside the slice)
+                traffic = 2 * sum(b for o in opnds
+                                  if (b := name_bytes.get(o, 0)) < res_bytes)
+            else:
+                traffic = res_bytes
+                for o in opnds:
+                    traffic += name_bytes.get(o, 0)
+            total += traffic * m
+            if seq_len and _is_score_shape(mm.group(1), seq_len,
+                                           score_exclude_dims):
+                score_traffic += traffic * m
+            elif op == "copy" and m > 1.0:
+                carry_copy_traffic += traffic * m
+    return total, score_traffic + carry_copy_traffic
+
+
+# =========================================================================
+# analytic FLOPs / bytes (global, whole step)
+# =========================================================================
+@dataclasses.dataclass
+class AnalyticCost:
+    matmul_flops: float        # "useful" 6ND-style
+    context_flops: float       # attention scores / SSD chunk terms
+    overhead_flops: float      # MoE dispatch/combine einsums
+    hbm_bytes: float
+
+    @property
+    def total_flops(self):
+        return self.matmul_flops + self.context_flops + self.overhead_flops
+
+
+def _layer_census(cfg: ModelConfig):
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) in ("attn", "attn_cross",
+                                          "cross_attn"))
+    n_ssm = sum(1 for i in range(cfg.num_layers)
+                if cfg.layer_kind(i) == "ssm")
+    n_moe = sum(1 for i in range(cfg.num_layers)
+                if cfg.ffn_kind(i) == "moe")
+    if cfg.family == "audio":
+        n_attn += cfg.audio.encoder_layers + cfg.num_layers  # enc self + dec cross
+    return n_attn, n_ssm, n_moe
+
+
+def analytic_cost(cfg: ModelConfig, shape: ShapeConfig,
+                  active_params: dict, total_params: int) -> AnalyticCost:
+    B = shape.global_batch
+    S = shape.seq_len
+    train = shape.kind == "train"
+    bwd = 3.0 if train else 1.0          # fwd + 2x bwd
+    n_attn, n_ssm, n_moe = _layer_census(cfg)
+    H = max(cfg.num_heads, 1)
+    hd = cfg.head_dim or 0
+
+    tok_dec = B * (1 if shape.kind == "decode" else S)
+    tok_enc = (B * cfg.audio.num_frames
+               if cfg.family == "audio" and shape.kind != "decode" else 0)
+    mult = 6.0 if train else 2.0
+    matmul = mult * (active_params["decoder"] * tok_dec
+                     + active_params["encoder"] * tok_enc)
+
+    # sequence-mixer context terms
+    if shape.kind == "decode":
+        ctx_attn = n_attn * B * S * H * hd * 4.0          # QK^T + AV, 1 tok
+    else:
+        ctx_attn = n_attn * B * S * S * H * hd * 4.0 * 0.5 * bwd
+    ctx_ssd = 0.0
+    if cfg.ssm is not None and n_ssm:
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        Hs = d_in // s.head_dim
+        if shape.kind == "decode":
+            ctx_ssd = n_ssm * B * Hs * s.head_dim * s.d_state * 6.0
+        else:
+            per_tok = (s.chunk * (s.d_state + s.head_dim)        # scores+out
+                       + 2 * s.d_state * s.head_dim)             # states
+            ctx_ssd = n_ssm * B * S * Hs * per_tok * 2.0 * bwd
+
+    # MoE dispatch/combine einsum overhead
+    ovh = 0.0
+    if cfg.moe is not None and n_moe:
+        m = cfg.moe
+        g = min(m.group_tokens, tok_dec)
+        C = max(min(int(-(-g // m.num_experts) * m.top_k
+                        * m.capacity_factor), g), m.top_k)
+        # dispatch + combine einsums: 2 x (2*E*C*d) FLOPs per token
+        ovh = n_moe * tok_dec * m.num_experts * C * cfg.d_model \
+            * 2.0 * 2.0 * bwd
+
+    # ---- HBM bytes ----
+    P = total_params
+    d = cfg.d_model
+    if train:
+        # bf16 weights read fwd + recompute + bwd; fp32 p/m/v read+write;
+        # bf16 grads write+read
+        w_traffic = P * (2 * 3 + 24 + 4)
+        # residual stream per logical layer, bf16, fwd write+read + bwd pair
+        act = cfg.num_layers * B * S * d * 2 * 4
+        logits = B * S * cfg.padded_vocab * 2 * 3
+        hbm = w_traffic + act + logits
+    elif shape.kind == "prefill":
+        w = P * 2
+        act = cfg.num_layers * B * S * d * 2 * 3
+        cache = _cache_bytes(cfg, B, S)
+        hbm = w + act + cache
+    else:
+        w = P * 2
+        cache = _cache_bytes(cfg, B, S) * 2   # read + write(update copy)
+        hbm = w + cache + B * cfg.padded_vocab * 2
+    return AnalyticCost(matmul, ctx_attn + ctx_ssd, ovh, float(hbm))
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, L: int) -> float:
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) == "attn")
+    n_ssm = sum(1 for i in range(cfg.num_layers)
+                if cfg.layer_kind(i) == "ssm")
+    total = 0.0
+    if cfg.mla is not None:
+        total += n_attn * B * L * (cfg.mla.kv_lora_rank
+                                   + cfg.mla.qk_rope_dim) * 2
+    else:
+        total += n_attn * B * L * cfg.num_kv_heads * (cfg.head_dim or 0) \
+            * 2 * 2
+    if cfg.ssm is not None and n_ssm:
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        Hs = d_in // s.head_dim
+        total += n_ssm * B * (Hs * s.head_dim * s.d_state * 4
+                              + (s.conv_width - 1)
+                              * (d_in + 2 * s.n_groups * s.d_state) * 2)
+    if cfg.family == "audio":
+        total += cfg.num_layers * B * cfg.audio.num_frames \
+            * cfg.num_kv_heads * (cfg.head_dim or 0) * 2 * 2
+    if cfg.family == "vlm":
+        n_cross = sum(1 for i in range(cfg.num_layers)
+                      if cfg.layer_kind(i) == "cross_attn")
+        total += n_cross * B * cfg.vision.num_image_tokens \
+            * cfg.num_kv_heads * (cfg.head_dim or 0) * 2 * 2
+    return total

@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, shards abstract params /
+optimizer state / caches with the partitioning rules, lowers the real
+train_step / prefill_step / decode_step against ShapeDtypeStruct inputs, and
+compiles.  It records memory_analysis, cost_analysis and the collective
+schedule (operand bytes parsed from the optimized HLO) — the inputs to the
+EXPERIMENTS.md roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all --multipod --out results/dryrun
+  REPRO_DRYRUN_DEVICES=8 ... --mesh-shape 2x4    (reduced local testing)
+"""
+
+import argparse  # noqa: E402  (XLA_FLAGS must precede all jax imports)
+import dataclasses
+import functools
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, get_arch, input_specs, shape_supported)
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.costmodel import V5E, roofline_terms
+from repro.launch import analysis
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.serve import engine
+from repro.sharding import partition
+from repro.train import trainer
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device bytes moved by each collective kind, from optimized HLO.
+
+    We count the *result* shapes of every collective op (post-SPMD shapes
+    are per-device), a standard upper-bound proxy for link traffic.
+    """
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        m = re.match(r"((?:\([^)]*\))|(?:[a-z0-9_\[\]{},.: ]+?))\s*"
+                     r"([a-z\-]+)\(", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-started.") in COLLECTIVES or op in COLLECTIVES or \
+           any(op.startswith(c) for c in COLLECTIVES):
+            kind = next(c for c in COLLECTIVES if op.startswith(c))
+            out[kind] += _shape_bytes(m.group(1))
+            counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# =========================================================================
+# active-parameter count (MODEL_FLOPS numerator)
+# =========================================================================
+def active_param_count(cfg: ModelConfig) -> dict:
+    """Logical (per-token-pass) parameter count: shared stacks count every
+    reuse; MoE expert tensors count top_k/E; embedding table excluded,
+    lm_head included."""
+    logical = dataclasses.replace(cfg, reuse=None)  # reuse => logical depth
+    shapes = tfm.abstract_params(logical)
+    moe = cfg.moe
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    enc = dec = 0
+    for path, leaf in flat:
+        keys = [k.key if hasattr(k, "key") else str(k) for k in path]
+        if keys[0] == "embed":
+            continue
+        n = int(np.prod(leaf.shape))
+        # routed-expert tensors carry an E dim at -3 (stacked: [R, E, d, f])
+        if ("ffn" in keys and moe is not None and leaf.ndim >= 3
+                and leaf.shape[-3] == moe.num_experts
+                and keys[-1] in ("w_gate", "w_up", "w_down")):
+            n = int(n * moe.top_k / moe.num_experts)
+        if len(keys) > 1 and keys[1] == "enc":
+            enc += n
+        else:
+            dec += n
+    if cfg.tie_embeddings:
+        dec += cfg.padded_vocab * cfg.d_model      # lm_head matmul still runs
+    return {"decoder": dec, "encoder": enc}
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    shapes = tfm.abstract_params(cfg)
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    act = active_param_count(cfg)
+    B = shape.global_batch
+    toks_dec = B * (1 if shape.kind == "decode" else shape.seq_len)
+    # encoder runs during train/prefill only (decode reuses the cached memory)
+    toks_enc = (B * cfg.audio.num_frames
+                if cfg.family == "audio" and shape.kind != "decode" else 0)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * (act["decoder"] * toks_dec + act["encoder"] * toks_enc)
+
+
+# =========================================================================
+# lowering one cell
+# =========================================================================
+def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
+               mesh_shape=None, compile_=True, extra_tag="",
+               legacy_decode=False, act_mode="replicated",
+               fp32_accum=False):
+    from repro.core import obu
+    obu.set_matmul_accum_fp32(fp32_accum)
+    cfg = get_arch(arch, reuse=reuse)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    result = {"arch": arch, "shape": shape_name, "reuse": reuse,
+              "multi_pod": multi_pod, "tag": extra_tag}
+    if not ok:
+        result["status"] = why
+        return result
+    if mesh_shape is not None:
+        axes = (("pod", "data", "model") if len(mesh_shape) == 3
+                else ("data", "model"))
+        mesh = mesh_lib.make_mesh(tuple(mesh_shape), axes)
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    result["mesh"] = dict(mesh.shape)
+
+    params_sds = tfm.abstract_params(cfg)
+    specs = tfm.model_specs(cfg)
+    report = partition.PartitionReport(dropped=[])
+    p_shard = partition.param_shardings(params_sds, specs, mesh, cfg.fsdp,
+                                        report)
+    apspec = partition.act_pspec(mesh, act_mode)
+    d_axes = partition.data_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in d_axes]))
+    batch_ok = shape.global_batch % dp_n == 0
+    dd = (d_axes if len(d_axes) > 1 else d_axes[0]) if batch_ok else None
+    if not batch_ok:
+        apspec = P(None, "model", None) if act_mode == "seq" else \
+            P(None, None, "model")
+    bsh = {"tokens": NamedSharding(mesh, P(dd))}
+    ispec = input_specs(cfg, shape)
+    for k in ("image_embeds", "audio_embeds"):
+        if k in ispec["batch"]:
+            bsh[k] = NamedSharding(mesh, P(dd, None, None))
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            # microbatching (grad accumulation) so activations fit HBM:
+            # chosen by model scale; the memory_analysis proves the fit.
+            n_params = total_param_count(cfg)
+            mb = 8 if n_params >= 10e9 else (4 if n_params >= 2e9 else 1)
+            # remat stays on even for small models: dropping it was measured
+            # WORSE (granite: t_mem 2.67->3.56s, 139 GB/dev — the 10x-wide
+            # MoE dispatch buffers get stored; §Perf granite iteration 2)
+            tcfg = TrainConfig(microbatch=mb)
+            step = trainer.make_train_step(cfg, tcfg, act_pspec=apspec,
+                                           remat=True)
+            result["microbatch"] = mb
+            opt_sds = jax.eval_shape(adamw.init, params_sds)
+            o_shard = adamw.OptState(
+                m=p_shard, v=p_shard,
+                step=partition.replicated(mesh))
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, bsh),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, ispec["batch"])
+        elif shape.kind == "prefill":
+            bf16_params = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.dtype(cfg.compute_dtype)
+                    if s.dtype == jnp.float32 else s.dtype), params_sds)
+            bf16_shard = p_shard
+            c_shard = partition.cache_shardings(cfg, mesh,
+                                                shape.global_batch,
+                                                shape.seq_len)
+            fn = functools.partial(engine.prefill_step, cfg=cfg,
+                                   cache_len=shape.seq_len,
+                                   act_pspec=apspec)
+            jitted = jax.jit(lambda p, b: fn(p, batch=b),
+                             in_shardings=(bf16_shard, bsh),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(bf16_params, ispec["batch"])
+        else:  # decode
+            bf16_params = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.dtype(cfg.compute_dtype)
+                    if s.dtype == jnp.float32 else s.dtype), params_sds)
+            c_shard = partition.cache_shardings(cfg, mesh,
+                                                shape.global_batch,
+                                                shape.seq_len)
+            fn = functools.partial(engine.decode_step, cfg=cfg,
+                                   act_pspec=None,
+                                   legacy_decode=legacy_decode)
+            jitted = jax.jit(
+                lambda p, b, c, pos: fn(p, batch=b, caches=c, pos=pos),
+                in_shardings=(p_shard, bsh, c_shard,
+                              partition.replicated(mesh)),
+                out_shardings=(None, c_shard),
+                donate_argnums=(2,))
+            lowered = jitted.lower(bf16_params, ispec["batch"],
+                                   ispec["caches"], ispec["pos"])
+        result["lower_s"] = round(time.time() - t0, 2)
+        if not compile_:
+            result["status"] = "lowered"
+            return result
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+    result["dropped_rules"] = [f"{a}:{d}" for a, d, _ in report.dropped[:8]]
+    # ---- analyses ----
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        if "argument_size_in_bytes" in result["memory"]:
+            m = result["memory"]
+            result["memory"]["per_device_total_gb"] = round(
+                (m.get("argument_size_in_bytes", 0)
+                 + m.get("output_size_in_bytes", 0)
+                 + m.get("temp_size_in_bytes", 0)) / 1e9, 3)
+    except Exception as e:  # CPU backend may not support it
+        result["memory"] = {"error": str(e)[:200]}
+    cost = compiled.cost_analysis() or {}
+    # NOTE: cost_analysis counts while (scan) bodies ONCE — reported raw for
+    # transparency; the roofline uses analytic FLOPs/bytes + trip-corrected
+    # collectives (launch/analysis.py, EXPERIMENTS.md §Method).
+    result["hlo_flops_raw"] = float(cost.get("flops", 0.0))
+    result["hlo_bytes_raw"] = float(cost.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    coll = analysis.collective_bytes_trip_corrected(hlo_text)
+    result["collectives"] = coll
+    excl = (cfg.d_model, cfg.padded_vocab, cfg.d_ff,
+            cfg.num_heads * (cfg.head_dim or 0))
+    traffic_dev, score_dev = analysis.hbm_traffic_trip_corrected(
+        hlo_text, seq_len=shape.seq_len, score_exclude_dims=excl)
+    acost = analysis.analytic_cost(cfg, shape, active_param_count(cfg),
+                                   total_param_count(cfg))
+    result["analytic"] = {"matmul_flops": acost.matmul_flops,
+                          "context_flops": acost.context_flops,
+                          "overhead_flops": acost.overhead_flops,
+                          "hbm_bytes_floor": acost.hbm_bytes,
+                          "hbm_bytes_hlo": traffic_dev * chips,
+                          "hbm_score_bytes_hlo": score_dev * chips}
+    # ---- roofline (single-pod table; multi-pod proves the pod axis) ----
+    # flops: analytic (scan-corrected); memory: trip-corrected HLO traffic
+    # (analytic floor reported alongside); collectives: trip-corrected HLO.
+    terms = roofline_terms(acost.total_flops, traffic_dev * chips,
+                           coll["total_bytes"] * chips, chips, V5E)
+    terms["t_memory_floor_s"] = acost.hbm_bytes / (chips * V5E.hbm_bw)
+    # Pallas-path memory term: the flash/SSD kernels keep the S^2 score
+    # buffers VMEM-resident; exclude them (kernels shipped + validated
+    # in kernels/, interpret-mode tested — DESIGN.md).
+    terms["t_memory_kernelized_s"] = max(
+        traffic_dev - score_dev, 0.0) * chips / (chips * V5E.hbm_bw)
+    bound_serial = (terms["t_compute_s"] + terms["t_memory_s"]
+                    + terms["t_collective_s"])
+    t_useful = acost.matmul_flops / (chips * V5E.peak_flops_bf16)
+    terms["mfu_overlapped"] = t_useful / max(
+        terms["t_compute_s"], terms["t_memory_s"], terms["t_collective_s"])
+    terms["mfu_serial"] = t_useful / bound_serial if bound_serial else 0.0
+    bound_kern = (terms["t_compute_s"] + terms["t_memory_kernelized_s"]
+                  + terms["t_collective_s"])
+    terms["mfu_kernelized"] = (t_useful / bound_kern) if bound_kern else 0.0
+    result["roofline"] = {k: (v if isinstance(v, str) else float(v))
+                          for k, v in terms.items()}
+    result["model_flops"] = acost.matmul_flops
+    result["useful_flops_ratio"] = (acost.matmul_flops / acost.total_flops
+                                    if acost.total_flops > 0 else 0.0)
+    result["status"] = "ok"
+    return result
+
+
+# =========================================================================
+def all_cells():
+    for arch in sorted(__import__("repro.configs", fromlist=["ARCHS"]).ARCHS):
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            yield arch, shape
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--reuse", action="store_true",
+                    help="use the R&B (PRM-shared) variant of the arch")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 2x4 or 2x2x2 (reduced local testing)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--decode-legacy", action="store_true",
+                    help="baseline decode path (cache copies; §Perf A/B)")
+    ap.add_argument("--act-mode", default="replicated",
+                    choices=["seq", "hidden", "replicated"],
+                    help="residual-stream sharding (§Perf A/B; 'replicated' "
+                         "measured best under GSPMD — see EXPERIMENTS.md)")
+    ap.add_argument("--fp32-accum", action="store_true",
+                    help="fp32 matmul outputs => fp32 TP collectives "
+                         "(baseline; §Perf A/B)")
+    args = ap.parse_args(argv)
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    results = []
+    for arch, shape in cells:
+        try:
+            r = lower_cell(arch, shape, multi_pod=args.multipod,
+                           reuse=args.reuse, mesh_shape=mesh_shape,
+                           compile_=not args.no_compile, extra_tag=args.tag,
+                           legacy_decode=args.decode_legacy,
+                           act_mode=args.act_mode,
+                           fp32_accum=args.fp32_accum)
+        except Exception as e:
+            r = {"arch": arch, "shape": shape, "status": "FAIL",
+                 "error": str(e)[:500]}
+        results.append(r)
+        rl = r.get("roofline", {})
+        print(f"[{r['status']:>4s}] {arch:25s} {shape:12s} "
+              f"mesh={r.get('mesh')} "
+              f"comp={rl.get('t_compute_s', 0):.2e}s "
+              f"mem={rl.get('t_memory_s', 0):.2e}s "
+              f"coll={rl.get('t_collective_s', 0):.2e}s "
+              f"dom={rl.get('dominant', '-')} "
+              f"mfu={rl.get('mfu_serial', 0):.2f} "
+              f"(lower {r.get('lower_s', 0)}s compile {r.get('compile_s', 0)}s)",
+              flush=True)
+        if r["status"] == "FAIL":
+            print("   error:", r["error"][:300], flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "FAIL"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Importing this module never touches jax device state; meshes are built
+inside functions only.  The dry-run sets XLA_FLAGS for 512 host devices
+*before* importing anything (see dryrun.py); everything else sees the real
+device count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — "
+            f"run via launch/dryrun.py which forces host platform devices")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

@@ -1,0 +1,353 @@
+"""Attention family: GQA/MHA with RoPE + KV cache, MLA (DeepSeek-V2),
+cross-attention (VLM / enc-dec).
+
+Cache layouts (per logical layer; stacked [R, T, ...] by the PRM runner):
+  gqa:    {"k": (B, L, KV, hd), "v": (B, L, KV, hd)}
+  mla:    {"ckv": (B, L, kv_lora), "kr": (B, L, rope_dim)}   (compressed!)
+  cross:  {"ck": (B, M, KV, hd), "cv": (B, M, KV, hd)}       (encoder memory)
+
+Decode steps take a scalar ``pos`` (aligned batched decode) and use
+dynamic_update_slice into the cache.  Softmax is always fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.core.obu import blend_dot
+from repro.models.layers import _dense_init, apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+def _maybe_t(x, w, transpose):
+    """OBU transpose where the matrix is square; identity path otherwise."""
+    if transpose and w.shape[0] == w.shape[1]:
+        return blend_dot(x, w, transpose=True)
+    return blend_dot(x, w, transpose=False)
+
+
+# =========================================================================
+# GQA / MHA
+# =========================================================================
+def init_gqa(key, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense_init(ks[0], (d, H * hd)),
+         "wk": _dense_init(ks[1], (d, KV * hd)),
+         "wv": _dense_init(ks[2], (d, KV * hd)),
+         "wo": _dense_init(ks[3], (H * hd, d))}
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+         "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    return p, s
+
+
+CHUNKED_ATTN_THRESHOLD = 8192   # use O(S*bq) chunked attention beyond this
+CHUNK_Q = 1024
+
+
+def _gqa_attend(q, k, v, mask):
+    """q: (B,S,H,hd) k/v: (B,L,KV,hd) mask: (B,S,L) or (S,L) broadcastable."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,blkh->bkgsl", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                       else mask[None, None, None, :, :], scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkh->bskgh", att.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    hd_v = v.shape[-1]                      # MLA: v head dim != qk head dim
+    return out.reshape(B, S, H * hd_v).astype(v.dtype)
+
+
+def _attend_seq(q, k, v, causal: bool):
+    """Full-sequence attention dispatcher.
+
+    Short sequences take the direct einsum; long ones a lax.scan over query
+    chunks (peak memory O(bq * L) instead of O(S * L) — this is what makes
+    the 32k-prefill cells fit in HBM; the Pallas flash kernel is the
+    TPU-native realization of the same schedule)."""
+    B, S, H, hd = q.shape
+    if S <= CHUNKED_ATTN_THRESHOLD or S % CHUNK_Q != 0:
+        if causal:
+            mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        else:
+            mask = jnp.ones((S, k.shape[1]), dtype=bool)
+        return _gqa_attend(q, k, v, mask)
+    nq = S // CHUNK_Q
+    hd_v = v.shape[-1]
+    qs = q.reshape(B, nq, CHUNK_Q, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, inp):
+        qc, i = inp
+        L = k.shape[1]
+        q_pos = i * CHUNK_Q + jnp.arange(CHUNK_Q)
+        if causal:
+            mask = q_pos[:, None] >= jnp.arange(L)[None, :]
+        else:
+            mask = jnp.ones((CHUNK_Q, L), dtype=bool)
+        return None, _gqa_attend(qc, k, v, mask)
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3).reshape(B, S, H * hd_v)
+
+
+def gqa_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
+                positions=None, cache=None):
+    """Full-sequence path (train / prefill).  If ``cache`` (a pre-allocated
+    capacity buffer) is given, the new K/V are written at offset 0 and the
+    filled buffer is returned (prefill)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, S, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, S, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, S, KV, hd)
+    if positions is None:
+        positions = jnp.arange(S)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = _attend_seq(q, k, v, causal)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        return y, {"k": ck, "v": cv}
+    return y, None
+
+
+def _attend_decode(q, ck, cv, k_new, v_new, pos):
+    """Decode attention against the *past-only* cache plus the current
+    token's K/V held separately — the cache is never rewritten here, so the
+    PRM runner can keep it as an in-place scan carry and write only the
+    one-token delta (EXPERIMENTS.md §Perf: decode traffic -> floor).
+
+    q: (B,1,H,hd)  ck/cv: (B,L,KV,hd)  k_new/v_new: (B,1,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = ck.shape[2]
+    G = H // KV
+    L = ck.shape[1]
+    qg = q.reshape(B, 1, KV, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s_c = jnp.einsum("bskgh,blkh->bkgsl", qg, ck,
+                     preferred_element_type=jnp.float32) * scale
+    s_c = jnp.where((jnp.arange(L) < pos)[None, None, None, None, :],
+                    s_c, NEG_INF)
+    s_n = jnp.einsum("bskgh,blkh->bkgsl", qg, k_new.astype(q.dtype),
+                     preferred_element_type=jnp.float32) * scale
+    s = jnp.concatenate([s_c, s_n], axis=-1)
+    att = jax.nn.softmax(s, axis=-1)
+    out = (jnp.einsum("bkgsl,blkh->bskgh",
+                      att[..., :L].astype(cv.dtype), cv,
+                      preferred_element_type=jnp.float32)
+           + jnp.einsum("bkgsl,blkh->bskgh",
+                        att[..., L:].astype(q.dtype),
+                        v_new.astype(q.dtype),
+                        preferred_element_type=jnp.float32))
+    hd_v = cv.shape[-1]
+    return out.reshape(B, 1, H * hd_v).astype(q.dtype)
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
+    """Single-token decode: x (B,1,d); cache k/v (B,L,KV,hd) read-only;
+    pos scalar.  Returns the one-token cache *delta* — the stack runner
+    writes it in place."""
+    B, S, d = x.shape
+    assert S == 1
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, 1, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
+    posv = jnp.reshape(pos, (1,))
+    cos, sin = rope_angles(posv, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = _attend_decode(q, cache["k"], cache["v"], k, v, pos)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    return y, {"k": k.astype(cache["k"].dtype),
+               "v": v.astype(cache["v"].dtype)}
+
+
+def gqa_decode_legacy(p, cfg: ModelConfig, x, cache, pos, *,
+                      transpose=False):
+    """Baseline decode (pre-§Perf): DUS the full cache buffer inside the
+    block and attend against it — kept as an A/B knob for the perf log."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, 1, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
+    posv = jnp.reshape(pos, (1,))
+    cos, sin = rope_angles(posv, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    L = ck.shape[1]
+    mask = (jnp.arange(L) <= pos)[None, :]
+    out = _gqa_attend(q, ck, cv, mask)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    return y, {"k": ck, "v": cv}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, length: int, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((batch, length, KV, hd), dtype=dtype)
+    return {"k": z, "v": z}
+
+
+# =========================================================================
+# MLA — multi-head latent attention (DeepSeek-V2)
+# =========================================================================
+def init_mla(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense_init(ks[0], (d, H * qd)),
+         "w_dkv": _dense_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_dim)),
+         "w_ukv": _dense_init(ks[2],
+                              (m.kv_lora_rank, H * (m.qk_nope_dim
+                                                    + m.v_head_dim))),
+         "wo": _dense_init(ks[3], (H * m.v_head_dim, d))}
+    s = {"wq": ("embed", "heads"), "w_dkv": ("embed", "kv_lora"),
+         "w_ukv": ("kv_lora", "heads"), "wo": ("heads", "embed")}
+    return p, s
+
+
+def _mla_qkr(p, cfg, x, positions):
+    """Project q (+rope) and the compressed kv latents for new tokens."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = blend_dot(x, p["wq"].astype(x.dtype), transpose=False)
+    q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    qn, qr = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    dkv = blend_dot(x, p["w_dkv"].astype(x.dtype), transpose=False)
+    ckv, kr = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+    kr = apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0, :]  # shared head
+    return qn, qr, ckv, kr
+
+
+def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
+                positions=None, cache=None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(S)
+    qn, qr, ckv, kr = _mla_qkr(p, cfg, x, positions)
+    ukv = blend_dot(ckv, p["w_ukv"].astype(x.dtype), transpose=False)
+    ukv = ukv.reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    kn, v = ukv[..., :m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :],
+                                              (B, S, H, m.qk_rope_dim))],
+                        axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    out = _attend_seq(q, k, v, causal)          # KV == H here
+    y = blend_dot(out, p["wo"].astype(x.dtype), transpose=False)
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+        ck = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0))
+        return y, {"ckv": cc, "kr": ck}
+    return y, None
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
+    """Absorbed-matrix MLA decode: attention runs in the compressed latent
+    space (scores against ``ckv`` directly), the up-projection is applied
+    only to the attended context — the paper-faithful low-memory path.
+    The cache is read-only; the one-token latent delta is returned for the
+    stack runner to write in place."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    assert S == 1
+    H = cfg.num_heads
+    posv = jnp.reshape(pos, (1,))
+    qn, qr, ckv_new, kr_new = _mla_qkr(p, cfg, x, posv)
+    ckv, kr = cache["ckv"], cache["kr"]
+    L = ckv.shape[1]
+    w_ukv = p["w_ukv"].astype(x.dtype).reshape(
+        m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    w_uk = w_ukv[..., :m.qk_nope_dim]          # (lora, H, nope)
+    w_uv = w_ukv[..., m.qk_nope_dim:]          # (lora, H, v)
+    q_lat = jnp.einsum("bshn,rhn->bshr", qn, w_uk)      # absorb W_uk into q
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+    s_c = (jnp.einsum("bshr,blr->bhsl", q_lat, ckv,
+                      preferred_element_type=jnp.float32)
+           + jnp.einsum("bshr,blr->bhsl", qr, kr,
+                        preferred_element_type=jnp.float32)) * scale
+    s_c = jnp.where((jnp.arange(L) < pos)[None, None, None, :], s_c, NEG_INF)
+    s_n = (jnp.einsum("bshr,blr->bhsl", q_lat, ckv_new.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+           + jnp.einsum("bshr,blr->bhsl", qr, kr_new.astype(x.dtype),
+                        preferred_element_type=jnp.float32)) * scale
+    att = jax.nn.softmax(jnp.concatenate([s_c, s_n], axis=-1), axis=-1)
+    ctx_lat = (jnp.einsum("bhsl,blr->bshr", att[..., :L].astype(x.dtype),
+                          ckv)
+               + jnp.einsum("bhsl,blr->bshr", att[..., L:].astype(x.dtype),
+                            ckv_new.astype(x.dtype)))
+    ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv)
+    y = blend_dot(ctx.reshape(B, S, H * m.v_head_dim),
+                  p["wo"].astype(x.dtype), transpose=False)
+    return y, {"ckv": ckv_new.astype(ckv.dtype),
+               "kr": kr_new.astype(kr.dtype)}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, length, m.kv_lora_rank), dtype=dtype),
+            "kr": jnp.zeros((batch, length, m.qk_rope_dim), dtype=dtype)}
+
+
+# =========================================================================
+# cross-attention (VLM image layers, enc-dec decoder)
+# =========================================================================
+def init_cross_attn(key, cfg: ModelConfig, d_memory: int | None = None):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dm = d_memory or d
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense_init(ks[0], (d, H * hd)),
+         "wk": _dense_init(ks[1], (dm, KV * hd)),
+         "wv": _dense_init(ks[2], (dm, KV * hd)),
+         "wo": _dense_init(ks[3], (H * hd, d))}
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+         "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    return p, s
+
+
+def cross_attn_memory(p, cfg: ModelConfig, memory):
+    """Precompute K/V from the (frozen-per-request) memory stream."""
+    B, M, _ = memory.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    k = blend_dot(memory, p["wk"].astype(memory.dtype),
+                  transpose=False).reshape(B, M, KV, hd)
+    v = blend_dot(memory, p["wv"].astype(memory.dtype),
+                  transpose=False).reshape(B, M, KV, hd)
+    return {"ck": k, "cv": v}
+
+
+def cross_attn_forward(p, cfg: ModelConfig, x, kv, *, transpose=False):
+    """x: (B,S,d); kv: precomputed {"ck","cv"} (B,M,KV,hd)."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, S, H, hd)
+    M = kv["ck"].shape[1]
+    mask = jnp.ones((S, M), dtype=bool)
+    out = _gqa_attend(q, kv["ck"], kv["cv"], mask)
+    return _maybe_t(out, p["wo"].astype(x.dtype), transpose)

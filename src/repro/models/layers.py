@@ -1,0 +1,134 @@
+"""Primitive layers: norms, RoPE, MLPs, embeddings.
+
+Every init function returns ``(params, specs)`` where ``specs`` mirrors the
+param pytree with tuples of *logical axis names* per dimension; the sharding
+layer (repro.sharding.partition) maps logical names onto mesh axes.
+
+Weight matmuls route through ``obu.blend_dot`` so the OBU "optical transpose"
+is a dot_general dimension swap, never a materialized transpose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.obu import blend_dot
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(shape[0]))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(d: int, kind: str = "rms"):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,))}, {"scale": ("embed",)}
+    return ({"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def apply_norm(p, x, kind: str = "rms", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for ``positions`` (any shape) -> (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        p = {"w_gate": _dense_init(ks[0], (d_model, d_ff)),
+             "w_up": _dense_init(ks[1], (d_model, d_ff)),
+             "w_down": _dense_init(ks[2], (d_ff, d_model))}
+        s = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+             "w_down": ("mlp", "embed")}
+    else:
+        p = {"w_up": _dense_init(ks[0], (d_model, d_ff)),
+             "w_down": _dense_init(ks[1], (d_ff, d_model))}
+        s = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    return p, s
+
+
+def apply_mlp(p, x, act: str = "swiglu", transpose: bool = False):
+    """FFN with OBU-transpose support.
+
+    The transposed reuse swaps the role of the up- and down-projections
+    (``W_down.T`` is a valid (d, ff) up-proj and vice versa) — the whole
+    block's weight set is served by the same physical storage, matching the
+    crossbar's vertical-input path.  For SwiGLU the gate <-> down pair swaps
+    and ``w_up`` is consumed transposed-compatibly unchanged.
+    """
+    if act == "swiglu":
+        wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+        if transpose:
+            g = blend_dot(x, wd, transpose=True)        # (ff, d).T : d->ff
+            u = blend_dot(x, wu, transpose=False)       # unchanged
+            h = jax.nn.silu(g) * u
+            return blend_dot(h, wg, transpose=True)     # (d, ff).T : ff->d
+        g = blend_dot(x, wg, transpose=False)
+        u = blend_dot(x, wu, transpose=False)
+        h = jax.nn.silu(g) * u
+        return blend_dot(h, wd, transpose=False)
+    wu, wd = p["w_up"], p["w_down"]
+    if transpose:
+        h = jax.nn.gelu(blend_dot(x, wd, transpose=True))
+        return blend_dot(h, wu, transpose=True)
+    h = jax.nn.gelu(blend_dot(x, wu, transpose=False))
+    return blend_dot(h, wd, transpose=False)
+
+
+# ------------------------------------------------------------- embeddings
+def init_embedding(key, vocab: int, d_model: int):
+    p = {"table": _dense_init(key, (vocab, d_model), scale=0.02)}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def init_unembed(key, d_model: int, vocab: int):
+    p = {"w": _dense_init(key, (d_model, vocab))}
+    return p, {"w": ("embed", "vocab")}
+
+
+def unembed(p, x):
+    return blend_dot(x, p["w"].astype(x.dtype), transpose=False)
+
+
+def init_linear(key, d_in: int, d_out: int, axes=("embed", "embed")):
+    return {"w": _dense_init(key, (d_in, d_out))}, {"w": axes}
+
+
+def apply_linear(p, x, transpose: bool = False):
+    return blend_dot(x, p["w"].astype(x.dtype), transpose=transpose)

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with grouped capacity dispatch (GShard style).
+
+Tokens are split into fixed-size *groups* (``MoEConfig.group_tokens``); each
+group routes independently with capacity ``C = ceil(g/E * top_k * cf)``.
+Dense one-hot dispatch/combine einsums keep every shape static (required for
+SPMD lowering) while both FLOPs and peak memory stay linear in tokens —
+O(tokens * E * C_g) with C_g fixed by the group size, NOT by the global
+batch.  The group dim shards over "data" (it is aligned with the token
+sharding) and the expert dim over "model" (expert parallelism); GSPMD turns
+dispatch/combine into all-to-alls.
+
+DeepSeek-V2-style *shared experts* (always-on) are a plain dense MLP added to
+the routed output.  OBU transpose on a routed expert swaps its up/down
+projections exactly like the dense MLP (see layers.apply_mlp).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import _dense_init, apply_mlp, init_mlp
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    E, f = mcfg.num_experts, mcfg.d_ff_expert
+    Ep = mcfg.num_basic_experts or E    # PRM across experts (R_e physical)
+    p = {"router": _dense_init(ks[0], (d_model, E), scale=0.02),
+         "w_gate": _dense_init(ks[1], (Ep, d_model, f)),
+         "w_up": _dense_init(ks[2], (Ep, d_model, f)),
+         "w_down": _dense_init(ks[3], (Ep, f, d_model))}
+    s = {"router": ("embed", "experts_r"),
+         "w_gate": ("experts", "embed", "mlp"),
+         "w_up": ("experts", "embed", "mlp"),
+         "w_down": ("experts", "mlp", "embed")}
+    if mcfg.num_shared:
+        sp, ss = init_mlp(ks[4], d_model,
+                          mcfg.d_ff_shared or f * mcfg.num_shared)
+        p["shared"] = sp
+        s["shared"] = ss
+    return p, s
+
+
+def _group_shape(n_tokens: int, mcfg: MoEConfig):
+    g = min(mcfg.group_tokens, n_tokens)
+    while n_tokens % g != 0:          # static search: g divides tokens
+        g -= 1
+    return n_tokens // g, g
+
+
+def _capacity(g: int, mcfg: MoEConfig) -> int:
+    cap = -(-g // mcfg.num_experts) * mcfg.top_k
+    cap = int(cap * mcfg.capacity_factor)
+    return max(min(cap, g), mcfg.top_k)
+
+
+def route(p, xg, mcfg: MoEConfig):
+    """Per-group routing.  xg: (G, g, d).
+
+    Returns dispatch (G,g,E,C), combine (G,g,E,C), aux losses.  Tokens
+    beyond an expert's capacity are dropped (standard GShard semantics)."""
+    G, g, d = xg.shape
+    E, K = mcfg.num_experts, mcfg.top_k
+    C = _capacity(g, mcfg)
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # (G,g,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)   # (G,g,K,E)
+    mask = jnp.max(sel, axis=2)                            # (G,g,E) in {0,1}
+    pos_in_e = jnp.cumsum(mask, axis=1) - 1.0              # (G,g,E)
+    keep = (pos_in_e < C) * mask
+    weight_ge = jnp.einsum("ngke,ngk->nge", sel, gate_vals) * keep
+    # the (G,g,E,C) one-hots are the MoE path's largest buffers — keep them
+    # bf16 (they hold exact 0/1 and softmax weights; §Perf granite iteration)
+    pos_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), C,
+                            dtype=jnp.bfloat16)            # (G,g,E,C)
+    dispatch = pos_oh * keep.astype(jnp.bfloat16)[..., None]
+    combine = pos_oh * weight_ge.astype(jnp.bfloat16)[..., None]
+    frac_tokens = jnp.mean(mask, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance": E * jnp.sum(frac_tokens * frac_probs),
+           "dropped_frac": 1.0 - jnp.sum(keep) / (G * g * K)}
+    return dispatch, combine, aux
+
+
+def _expert_weights(p, mcfg: MoEConfig, dtype):
+    """Effective (E, ...) expert banks.  With ``num_basic_experts`` set,
+    the E logical experts are *blended* from R_e basic experts (PRM across
+    the expert dimension): expert e reuses basic e % R_e, diversified by a
+    static OBU group-shuffle of its gate activations (applied in
+    apply_moe) — one physical programming serves E/R_e experts."""
+    wg, wu, wd = (p["w_gate"].astype(dtype), p["w_up"].astype(dtype),
+                  p["w_down"].astype(dtype))
+    E = mcfg.num_experts
+    if mcfg.num_basic_experts and mcfg.num_basic_experts < E:
+        idx = jnp.arange(E) % mcfg.num_basic_experts
+        wg, wu, wd = wg[idx], wu[idx], wd[idx]
+    return wg, wu, wd
+
+
+def _expert_gate_perms(mcfg: MoEConfig):
+    """(E, f) static permutation table for the blended experts' gate
+    activations; identity for basic (first-use) experts."""
+    import numpy as np
+    from repro.core.obu import group_shuffle_permutation
+    E, f = mcfg.num_experts, mcfg.d_ff_expert
+    Rp = mcfg.num_basic_experts
+    table = np.tile(np.arange(f), (E, 1))
+    for e in range(E):
+        t = e // Rp                    # reuse index of this expert
+        if t > 0:
+            g = min(4 * t, max(2, f // 2))
+            if f % g:
+                g = 2
+            table[e] = group_shuffle_permutation(f, g)
+    return jnp.asarray(table)
+
+
+def apply_moe(p, x, mcfg: MoEConfig, transpose: bool = False):
+    """x: (B, S, d) -> (B, S, d) plus aux losses."""
+    B, S, d = x.shape
+    G, g = _group_shape(B * S, mcfg)
+    xg = x.reshape(G, g, d)
+    dispatch, combine, aux = route(p, xg, mcfg)
+    xe = jnp.einsum("ngec,ngd->necd", dispatch.astype(x.dtype), xg)
+    wg, wu, wd = _expert_weights(p, mcfg, x.dtype)
+    blend_experts = bool(mcfg.num_basic_experts
+                         and mcfg.num_basic_experts < mcfg.num_experts)
+    if transpose:
+        gate = jnp.einsum("necd,efd->necf", xe, wd)  # W_down.T as up-proj
+        up = jnp.einsum("necd,edf->necf", xe, wu)
+        h = jax.nn.silu(gate) * up
+        ye = jnp.einsum("necf,edf->necd", h, wg)     # W_gate.T as down-proj
+    else:
+        gate = jnp.einsum("necd,edf->necf", xe, wg)
+        if blend_experts:
+            perms = _expert_gate_perms(mcfg)            # (E, f) static
+            gate = jnp.take_along_axis(
+                gate, perms[None, :, None, :], axis=-1)
+        up = jnp.einsum("necd,edf->necf", xe, wu)
+        h = jax.nn.silu(gate) * up
+        ye = jnp.einsum("necf,efd->necd", h, wd)
+    yg = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)
+    y = yg.reshape(B, S, d)
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, act="swiglu", transpose=transpose)
+    return y, aux

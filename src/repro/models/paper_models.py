@@ -1,0 +1,286 @@
+"""The paper's own evaluation models: MLP, MLP-Mixer, VGG-13, ResNet-18 —
+each with first-class PRM weight sharing + OBU transforms.
+
+These are the models behind Tables 4/5.  Dims the paper leaves unspecified
+are chosen to land on its reported parameter counts (documented inline and
+in EXPERIMENTS.md):
+
+  MLP        784-176-(176x176 x6)-10          -> 0.36M  (paper: 0.36M)
+  MLP-Mixer  patch4 C=128 token64 ch256, 8 blk -> ~0.66M (paper: 0.68M)
+  VGG-13     CIFAR conv stack                  -> ~9.4M  (paper: 9.42M)
+  ResNet-18  CIFAR stem                        -> ~11.2M (paper: 9.22M*)
+  (*paper's count likely excludes some shortcuts; ours is the standard one.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.obu import blend_dot
+from repro.core.prm import ReuseConfig
+from repro.core.sharing import SharedStack, run_stack, stacked_init
+from repro.models.layers import _dense_init, apply_norm, init_norm
+
+
+# =========================================================================
+# MLP (MNIST-scale)
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_in: int = 784
+    width: int = 176
+    depth: int = 6                 # hidden width x width layers
+    classes: int = 10
+    reuse: Optional[ReuseConfig] = None
+
+
+def mlp_init(key, cfg: MLPConfig):
+    ks = jax.random.split(key, 3)
+    shared = SharedStack.build(cfg.depth, cfg.width, cfg.reuse)
+    params = {
+        "w_in": _dense_init(ks[0], (cfg.d_in, cfg.width)),
+        "hidden": stacked_init(
+            lambda k: {"w": _dense_init(k, (cfg.width, cfg.width))},
+            ks[1], shared.num_physical),
+        "w_out": _dense_init(ks[2], (cfg.width, cfg.classes)),
+    }
+    return params, shared
+
+
+def mlp_forward(params, cfg: MLPConfig, shared: SharedStack, x):
+    h = jax.nn.relu(blend_dot(x, params["w_in"], transpose=False))
+
+    def block(p, h, cache, aux, *, transpose, reuse_index):
+        return jax.nn.relu(blend_dot(h, p["w"], transpose=transpose)), \
+            cache, aux
+
+    h, _, _ = run_stack(block, params["hidden"], h, shared)
+    return blend_dot(h, params["w_out"], transpose=False)
+
+
+def mlp_weight_shapes(cfg: MLPConfig):
+    """(rows, cols) of every matrix in one basic hidden block (cost model)."""
+    return [(cfg.width, cfg.width)]
+
+
+# =========================================================================
+# MLP-Mixer (CIFAR-scale)
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class MixerConfig:
+    image: int = 32
+    patch: int = 4
+    channels: int = 128
+    token_mlp: int = 64
+    channel_mlp: int = 256
+    blocks: int = 8
+    classes: int = 10
+    reuse: Optional[ReuseConfig] = None
+
+    @property
+    def tokens(self) -> int:
+        return (self.image // self.patch) ** 2
+
+
+def mixer_init(key, cfg: MixerConfig):
+    ks = jax.random.split(key, 4)
+    shared = SharedStack.build(cfg.blocks, cfg.channels, cfg.reuse)
+    S, C = cfg.tokens, cfg.channels
+
+    def one_block(k):
+        kk = jax.random.split(k, 4)
+        p = {"tok_w1": _dense_init(kk[0], (S, cfg.token_mlp)),
+             "tok_w2": _dense_init(kk[1], (cfg.token_mlp, S)),
+             "ch_w1": _dense_init(kk[2], (C, cfg.channel_mlp)),
+             "ch_w2": _dense_init(kk[3], (cfg.channel_mlp, C)),
+             "norm1": init_norm(C, "layer")[0],
+             "norm2": init_norm(C, "layer")[0]}
+        return p
+
+    params = {
+        "embed": _dense_init(ks[0], (cfg.patch * cfg.patch * 3, C)),
+        "blocks": stacked_init(one_block, ks[1], shared.num_physical),
+        "norm": init_norm(C, "layer")[0],
+        "head": _dense_init(ks[2], (C, cfg.classes)),
+    }
+    return params, shared
+
+
+def _patchify(x, patch):
+    B, H, W, C3 = x.shape
+    hp, wp = H // patch, W // patch
+    x = x.reshape(B, hp, patch, wp, patch, C3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, hp * wp, patch * patch * C3)
+
+
+def mixer_forward(params, cfg: MixerConfig, shared: SharedStack, images):
+    h = blend_dot(_patchify(images, cfg.patch), params["embed"],
+                  transpose=False)
+
+    def block(p, h, cache, aux, *, transpose, reuse_index):
+        # token mixing (the model's own inner transpose)
+        y = apply_norm(p["norm1"], h, "layer")
+        y = jnp.swapaxes(y, -1, -2)                       # (B, C, S)
+        y = blend_dot(y, p["tok_w1"], transpose=False)
+        y = blend_dot(jax.nn.gelu(y), p["tok_w2"], transpose=False)
+        h = h + jnp.swapaxes(y, -1, -2)
+        # channel mixing — OBU transpose swaps the ch-MLP in/out projections
+        y = apply_norm(p["norm2"], h, "layer")
+        if transpose:
+            y = blend_dot(y, p["ch_w2"], transpose=True)
+            y = blend_dot(jax.nn.gelu(y), p["ch_w1"], transpose=True)
+        else:
+            y = blend_dot(y, p["ch_w1"], transpose=False)
+            y = blend_dot(jax.nn.gelu(y), p["ch_w2"], transpose=False)
+        return h + y, cache, aux
+
+    h, _, _ = run_stack(block, params["blocks"], h, shared)
+    h = apply_norm(params["norm"], h, "layer")
+    return blend_dot(jnp.mean(h, axis=1), params["head"], transpose=False)
+
+
+def mixer_weight_shapes(cfg: MixerConfig):
+    return [(cfg.tokens, cfg.token_mlp), (cfg.token_mlp, cfg.tokens),
+            (cfg.channels, cfg.channel_mlp),
+            (cfg.channel_mlp, cfg.channels)]
+
+
+# =========================================================================
+# conv helpers (VGG / ResNet)
+# =========================================================================
+def _conv_init(key, cin, cout, k=3):
+    scale = 1.0 / jnp.sqrt(cin * k * k)
+    return jax.random.normal(key, (k, k, cin, cout)) * scale
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+VGG13_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, "M",
+              512, 512, "M", 512, 512, "M"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VGGConfig:
+    classes: int = 10
+    share_same_shape: bool = False   # R&B: share same-shape conv pairs
+
+
+def vgg13_init(key, cfg: VGGConfig):
+    params = {"convs": [], "shared_map": []}
+    cin = 3
+    seen: dict = {}
+    ks = iter(jax.random.split(key, 32))
+    for item in VGG13_PLAN:
+        if item == "M":
+            continue
+        shape = (cin, item)
+        if cfg.share_same_shape and shape in seen:
+            params["shared_map"].append(seen[shape])      # reuse physical idx
+        else:
+            params["convs"].append(_conv_init(next(ks), cin, item))
+            idx = len(params["convs"]) - 1
+            params["shared_map"].append(idx)
+            if cfg.share_same_shape:
+                seen[shape] = idx
+        cin = item
+    params["head"] = _dense_init(next(ks), (512, cfg.classes))
+    return params
+
+
+def vgg13_forward(params, cfg: VGGConfig, x):
+    ci = 0
+    for item in VGG13_PLAN:
+        if item == "M":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+            continue
+        w = params["convs"][params["shared_map"][ci]]
+        x = jax.nn.relu(_conv(x, w))
+        ci += 1
+    x = jnp.mean(x, axis=(1, 2))
+    return blend_dot(x, params["head"], transpose=False)
+
+
+def vgg13_weight_shapes(cfg: VGGConfig, shared: bool):
+    """Flattened (rows, cols) matrices for the photonic cost model; conv
+    kxkxCinxCout maps onto the crossbar as (k*k*Cin, Cout)."""
+    shapes, programs = [], []
+    cin = 3
+    seen = {}
+    for item in VGG13_PLAN:
+        if item == "M":
+            continue
+        key = (cin, item)
+        is_new = not (shared and key in seen)
+        shapes.append((9 * cin, item))
+        programs.append(1 if is_new else 0)
+        seen[key] = True
+        cin = item
+    return shapes, programs
+
+
+RESNET18_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    classes: int = 10
+    share_within_stage: bool = False   # R&B: 2nd block reuses the 1st
+
+
+def resnet18_init(key, cfg: ResNetConfig):
+    """CIFAR ResNet-18.  With ``share_within_stage`` every stage keeps only
+    its downsampling block; the stride-1 residual blocks *reuse* the
+    downsample block's (cout, cout) conv — valid same-shape PRM sharing."""
+    ks = iter(jax.random.split(key, 64))
+    params = {"stem": _conv_init(next(ks), 3, 64), "stages": []}
+    cin = 64
+    for cout, blocks, stride in RESNET18_STAGES:
+        stage = [{"c1": _conv_init(next(ks), cin, cout),
+                  "c2": _conv_init(next(ks), cout, cout)}]
+        if stride != 1 or cin != cout:
+            stage[0]["proj"] = _conv_init(next(ks), cin, cout, k=1)
+        if not cfg.share_within_stage:
+            for _ in range(blocks - 1):
+                stage.append({"c1": _conv_init(next(ks), cout, cout),
+                              "c2": _conv_init(next(ks), cout, cout)})
+        params["stages"].append(stage)
+        cin = cout
+    params["head"] = _dense_init(next(ks), (512, cfg.classes))
+    return params
+
+
+def resnet18_forward(params, cfg: ResNetConfig, x):
+    x = jax.nn.relu(_conv(x, params["stem"]))
+    for (cout, blocks, stride), stage in zip(RESNET18_STAGES,
+                                             params["stages"]):
+        blk0 = stage[0]
+        h = jax.nn.relu(_conv(x, blk0["c1"], stride=stride))
+        h = _conv(h, blk0["c2"])
+        sc = _conv(x, blk0["proj"], stride=stride) if "proj" in blk0 else x
+        x = jax.nn.relu(h + sc)
+        for b in range(1, blocks):
+            if cfg.share_within_stage:
+                blk = {"c1": blk0["c2"], "c2": blk0["c2"]}  # PRM reuse
+            else:
+                blk = stage[b]
+            h = jax.nn.relu(_conv(x, blk["c1"]))
+            h = _conv(h, blk["c2"])
+            x = jax.nn.relu(h + x)
+    x = jnp.mean(x, axis=(1, 2))
+    return blend_dot(x, params["head"], transpose=False)
+
+
+def param_count(tree) -> int:
+    import numpy as np
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)
+                   if hasattr(x, "shape")))

@@ -1,0 +1,248 @@
+"""Mamba-2 SSD (state-space duality) sequence mixer — chunked scan form.
+
+Implements the SSD algorithm (Dao & Gu, arXiv:2405.21060): the sequence is
+split into chunks of length L; intra-chunk terms are a masked quadratic form
+(MXU-friendly), inter-chunk terms carry a (H, P, N) state through a
+lax.scan.  Complexity O(S * L) instead of O(S^2) — this is what makes the
+``long_500k`` cells runnable for mamba2/jamba.
+
+Cache layout (decode): {"h": (B, H, P, N) fp32, "conv": (B, W-1, conv_dim)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import _dense_init, apply_norm
+from repro.core.obu import blend_dot
+
+
+def ssm_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, heads, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    in_width = 2 * d_in + 2 * s.n_groups * s.d_state + H
+    p = {"w_in": _dense_init(ks[0], (d, in_width)),
+         "conv_k": _dense_init(ks[1], (s.conv_width, conv_dim), scale=0.5),
+         "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+         "D": jnp.ones((H,)),
+         "dt_bias": jnp.zeros((H,)),
+         "norm_scale": jnp.ones((d_in,)),
+         "w_out": _dense_init(ks[5], (d_in, d))}
+    spec = {"w_in": ("embed", "ssm_in"), "conv_k": (None, "ssm_conv"),
+            "A_log": ("ssm_heads",), "D": ("ssm_heads",),
+            "dt_bias": ("ssm_heads",), "norm_scale": ("ssm_inner",),
+            "w_out": ("ssm_inner", "embed")}
+    return p, spec
+
+
+def _split_in(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    d_in, H, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + d_in + 2 * gn]
+    dt = proj[..., d_in + d_in + 2 * gn:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, kernel):
+    """Depthwise causal conv, width W: y[t] = sum_w k[w] * x[t-W+1+w]."""
+    W = kernel.shape[0]
+    pads = [(0, 0)] * xBC.ndim
+    pads[1] = (W - 1, 0)
+    xp = jnp.pad(xBC, pads)
+    y = sum(kernel[w][None, None, :] * xp[:, w:w + xBC.shape[1], :]
+            for w in range(W))
+    return jax.nn.silu(y)
+
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L) with S[i,j] = sum_{k=j+1..i} x_k (i>=j)."""
+    L = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., :, None], (*x.shape, L))
+    strict = jnp.tril(jnp.ones((L, L), dtype=bool), -1)
+    xx = jnp.where(strict, xx, 0.0)
+    s = jnp.cumsum(xx, axis=-2)
+    incl = jnp.tril(jnp.ones((L, L), dtype=bool), 0)
+    return jnp.where(incl, s, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """SSD scan.
+
+    x:  (b, S, H, P)   dt: (b, S, H)   A: (H,) negative
+    B, C: (b, S, G, N)
+    Returns y (b, S, H, P) and final state (b, H, P, N), fp32 state math.
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    L = chunk
+    S_orig = S
+    if S % L != 0:
+        # zero-pad the tail: dt == 0 there, so exp(dt*A) == 1 and x*dt == 0 —
+        # the padded steps are exact no-ops on the carried state.
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // L
+    rep = H // G
+    x32 = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    xdt = x32 * dt[..., None]                           # fold dt into x
+    dA = dt * A[None, None, :]                          # (b,S,H), negative
+    xc = xdt.reshape(b, nc, L, H, P)
+    Bc = B.astype(jnp.float32).reshape(b, nc, L, G, N)
+    Cc = C.astype(jnp.float32).reshape(b, nc, L, G, N)
+    dAc = dA.reshape(b, nc, L, H).transpose(0, 1, 3, 2)  # (b,nc,H,L)
+    dA_cs = jnp.cumsum(dAc, axis=-1)                     # (b,nc,H,L)
+    # --- intra-chunk (diagonal blocks) ---
+    Lmat = jnp.exp(_segsum(dAc))                         # (b,nc,H,L,L)
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (b,nc,L,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp",
+                        scores, Lmat, xc)
+    # --- chunk states ---
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)      # (b,nc,H,L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bh, decay_states, xc)
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(dA_cs[..., -1])                # (b,nc,H)
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                   # emit state BEFORE chunk
+    h_init = (jnp.zeros((b, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_prev = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (b,nc,H,P,N)
+    state_decay = jnp.exp(dA_cs).transpose(0, 1, 3, 2)   # (b,nc,L,H)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, h_prev, state_decay)
+    y = (y_diag + y_off).reshape(b, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_reference(x, dt, A, B, C, h0=None):
+    """O(S) sequential oracle (per-token recurrence) for tests."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    dt = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp     # (b,H,P) (b,H) (b,H,N) (b,H,N)
+        dA = jnp.exp(dtt * A[None, :])
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bt, xt * dtt[..., None])
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+        return h, y
+
+    h_init = (jnp.zeros((b, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    hT, ys = jax.lax.scan(
+        step, h_init,
+        (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+         dt.transpose(1, 0, 2), Bh.transpose(1, 0, 2, 3),
+         Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT
+
+
+# =========================================================================
+# full mamba2 block
+# =========================================================================
+def ssm_forward(p, cfg: ModelConfig, x, *, transpose=False,
+                return_cache=False):
+    """Full-sequence mamba2 block (train / prefill)."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    d_in, H, conv_dim = ssm_dims(cfg)
+    proj = blend_dot(x, p["w_in"].astype(x.dtype), transpose=False)
+    z, xBC, dt = _split_in(cfg, proj)
+    xBC = _causal_conv(xBC, p["conv_k"].astype(x.dtype))
+    gn = s.n_groups * s.d_state
+    xs = xBC[..., :d_in].reshape(B_, S, H, s.head_dim)
+    Bm = xBC[..., d_in:d_in + gn].reshape(B_, S, s.n_groups, s.d_state)
+    Cm = xBC[..., d_in + gn:].reshape(B_, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xs
+    y = y.reshape(B_, S, d_in)
+    y = apply_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z),
+                   kind="rms", eps=cfg.norm_eps)
+    out = blend_dot(y, p["w_out"].astype(x.dtype),
+                    transpose=transpose and d_in == d)
+    if return_cache:
+        return out, {"h": h_last, "conv": _conv_tail(cfg, x, p)}
+    return out, None
+
+
+def _conv_tail(cfg, x, p):
+    """Last (W-1) pre-conv xBC rows, for decode continuation."""
+    s = cfg.ssm
+    d_in, _, conv_dim = ssm_dims(cfg)
+    proj = blend_dot(x[:, -(s.conv_width - 1):, :],
+                     p["w_in"].astype(x.dtype), transpose=False)
+    _, xBC, _ = _split_in(cfg, proj)
+    return xBC
+
+
+def ssm_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
+    """Single-token recurrent step. x: (B,1,d)."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    assert S == 1
+    d_in, H, conv_dim = ssm_dims(cfg)
+    proj = blend_dot(x, p["w_in"].astype(x.dtype), transpose=False)
+    z, xBC_new, dt = _split_in(cfg, proj)          # (B,1,*)
+    # causal conv against the cached tail
+    hist = jnp.concatenate([cache["conv"],
+                            xBC_new.astype(cache["conv"].dtype)], axis=1)
+    kernel = p["conv_k"].astype(x.dtype)
+    conv_out = sum(kernel[w][None, :] * hist[:, w, :]
+                   for w in range(s.conv_width))
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    gn = s.n_groups * s.d_state
+    xs = xBC[..., :d_in].reshape(B_, H, s.head_dim)
+    Bm = xBC[..., d_in:d_in + gn].reshape(B_, s.n_groups, s.d_state)
+    Cm = xBC[..., d_in + gn:].reshape(B_, s.n_groups, s.d_state)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])
+    h = cache["h"] * dA[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh, xs.astype(jnp.float32) * dt[..., None])
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype)[None, :, None] * xs
+    y = y.reshape(B_, 1, d_in)
+    y = apply_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z),
+                   kind="rms", eps=cfg.norm_eps)
+    out = blend_dot(y, p["w_out"].astype(x.dtype),
+                    transpose=transpose and d_in == d)
+    return out, {"h": h, "conv": hist[:, 1:, :]}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in, H, conv_dim = ssm_dims(cfg)
+    return {"h": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype)}

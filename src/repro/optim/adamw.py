@@ -1,0 +1,74 @@
+"""AdamW + cosine schedule + global-norm clipping, pure-pytree JAX.
+
+Optimizer state (m, v) inherits each param's sharding, so under FSDP the
+full Adam state is sharded too (ZeRO-style).  Master params stay fp32; the
+forward pass casts to ``cfg.compute_dtype`` (bf16), which makes gradients —
+and therefore the data-parallel reduce collectives — bf16 ("gradient
+compression" in DESIGN.md §3)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class OptState:
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init(params) -> OptState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def cosine_lr(tcfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return tcfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(params, grads, state: OptState, tcfg: TrainConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = cosine_lr(tcfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = tcfg.beta1, tcfg.beta2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step)
+        vh = v / (1 - b2 ** step)
+        p_new = p - lr * (mh / (jnp.sqrt(vh) + 1e-8)
+                          + tcfg.weight_decay * p)
+        return p_new.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(m=new_m, v=new_v, step=step), metrics
+
+
+jax.tree_util.register_dataclass(OptState, ("m", "v", "step"), ())

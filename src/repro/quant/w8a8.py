@@ -1,0 +1,67 @@
+"""Post-training W8A8 quantization (the paper's deployment setting, §4).
+
+Weights: symmetric per-output-channel int8.  Activations: symmetric
+per-tensor int8 with calibration over sample batches.  ``quantize_params``
+rewrites every 2-D+ matmul weight into (int8, scale) pairs;
+``dequantize_params`` restores an fp tree for execution (simulated
+quantization — matmuls run via the photonic kernel on the int8 pairs where
+wired, elsewhere deq-then-matmul, which is bit-identical in fp32).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.photonic import quantize_symmetric
+
+QUANT_MIN_DIM = 2
+
+
+def quantize_params(params: Any, bits: int = 8) -> tuple[Any, Any]:
+    """Returns (q_tree, scale_tree) mirroring params; non-matrix leaves
+    (norm scales, biases, 1-D) pass through unquantized (scale=None)."""
+
+    def q(leaf):
+        if leaf.ndim < QUANT_MIN_DIM or not jnp.issubdtype(
+                leaf.dtype, jnp.floating):
+            return leaf, None
+        qv, scale = quantize_symmetric(leaf, bits, axis=tuple(
+            range(leaf.ndim - 1)))
+        return qv, scale
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    qs = [q(l) for l in flat]
+    q_tree = jax.tree_util.tree_unflatten(treedef, [a for a, _ in qs])
+    s_tree = jax.tree_util.tree_unflatten(treedef, [s for _, s in qs])
+    return q_tree, s_tree
+
+
+def dequantize_params(q_tree: Any, s_tree: Any) -> Any:
+    def dq(qv, s):
+        if s is None:
+            return qv
+        return (qv.astype(jnp.float32) * s).astype(jnp.float32)
+
+    return jax.tree.map(dq, q_tree, s_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def quantization_error(params: Any, bits: int = 8) -> dict:
+    """Max/mean relative error introduced by W8 PTQ (per-tensor summary)."""
+    q, s = quantize_params(params, bits)
+    dq = dequantize_params(q, s)
+    errs = []
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(dq)):
+        if a.shape != b.shape or a.ndim < QUANT_MIN_DIM:
+            continue
+        denom = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8)
+        errs.append(float(jnp.max(jnp.abs(a - b)) / denom))
+    return {"max_rel_err": max(errs) if errs else 0.0,
+            "mean_rel_err": float(np.mean(errs)) if errs else 0.0}
+
+
+def model_bytes(q_tree: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(q_tree))

@@ -1,0 +1,114 @@
+"""Wave-scheduling request batcher for the serving engine.
+
+Groups queued requests into fixed-size *waves* (padding prompts to the wave
+maximum), runs one prefill + shared decode loop per wave through
+``serve.engine``, and tracks padding efficiency — the production pattern for
+aligned-batch engines whose decode step shares a single position counter
+(ours does: the PRM cache layout keeps all slots in lockstep).
+
+This is deliberately a *static* scheduler: requests never join a running
+wave.  A continuous (slot-level) scheduler needs per-slot positions in the
+attention mask — noted in DESIGN.md as future work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serve import engine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (prompt_len,) int32
+    max_new: int
+    extras: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray             # (prompt_len + n_generated,)
+    prompt_len: int
+    padded_to: int
+
+
+@dataclasses.dataclass
+class WaveStats:
+    waves: int = 0
+    requests: int = 0
+    prompt_tokens: int = 0
+    padded_tokens: int = 0
+    generated_tokens: int = 0
+
+    @property
+    def padding_overhead(self) -> float:
+        total = self.prompt_tokens + self.padded_tokens
+        return self.padded_tokens / total if total else 0.0
+
+
+class WaveBatcher:
+    """Admit requests, emit completions wave by wave."""
+
+    def __init__(self, params, cfg: ModelConfig, wave_size: int = 8,
+                 pad_id: int = 0):
+        self.params = engine.cast_params(params, cfg)
+        self.cfg = cfg
+        self.wave_size = wave_size
+        self.pad_id = pad_id
+        self.queue: list[Request] = []
+        self.stats = WaveStats()
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _form_wave(self) -> list[Request]:
+        # longest-prompt-first within the queue head window minimizes padding
+        window = sorted(self.queue[:4 * self.wave_size],
+                        key=lambda r: -len(r.prompt))
+        wave = window[:self.wave_size]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def _run_wave(self, wave: list[Request]) -> list[Completion]:
+        B = len(wave)
+        max_prompt = max(len(r.prompt) for r in wave)
+        max_new = max(r.max_new for r in wave)
+        prompts = np.full((B, max_prompt), self.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            # left-pad so every prompt ends at the same position (the
+            # aligned decode then starts all slots together)
+            prompts[i, max_prompt - len(r.prompt):] = r.prompt
+        extras = wave[0].extras
+        out = engine.generate(self.params, self.cfg, jnp.asarray(prompts),
+                              max_new, extras=extras)
+        out = np.asarray(out)
+        comps = []
+        for i, r in enumerate(wave):
+            toks = out[i, max_prompt - len(r.prompt):
+                       max_prompt + r.max_new]
+            comps.append(Completion(rid=r.rid, tokens=toks,
+                                    prompt_len=len(r.prompt),
+                                    padded_to=max_prompt))
+            self.stats.prompt_tokens += len(r.prompt)
+            self.stats.padded_tokens += max_prompt - len(r.prompt)
+            self.stats.generated_tokens += r.max_new
+        self.stats.waves += 1
+        self.stats.requests += B
+        return comps
+
+    def drain(self) -> list[Completion]:
+        """Run everything queued; returns completions in wave order."""
+        done: list[Completion] = []
+        while self.queue:
+            wave = self._form_wave()
+            done.extend(self._run_wave(wave))
+        return done

@@ -1,0 +1,94 @@
+"""Serving engine: prefill + batched decode over the PRM-stacked caches.
+
+``prefill_step`` and ``decode_step`` are the functions the dry-run lowers for
+the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells; ``generate`` is
+the host loop used by the examples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+NEG_INF = -1e30
+
+
+def cast_params(params, cfg: ModelConfig):
+    return jax.tree.map(
+        lambda p: p.astype(cfg.compute_dtype)
+        if p.dtype == jnp.float32 else p, params)
+
+
+def prefill_step(params, cfg: ModelConfig, batch, cache_len: int,
+                 act_pspec=None):
+    """Run the prompt through the model, filling fresh caches.
+
+    Returns (last_token_logits (B, V), caches)."""
+    B = batch["tokens"].shape[0]
+    caches = tfm.init_caches(cfg, B, cache_len,
+                             dtype=jnp.dtype(cfg.compute_dtype))
+    logits, caches, _ = tfm.forward(params, cfg, batch, mode="prefill",
+                                    caches=caches, act_pspec=act_pspec)
+    return logits[:, -1, :], caches
+
+
+def decode_step(params, cfg: ModelConfig, batch, caches, pos,
+                act_pspec=None, legacy_decode=False):
+    """One token for every sequence in the batch. batch["tokens"]: (B, 1)."""
+    logits, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
+                                    caches=caches, pos=pos,
+                                    act_pspec=act_pspec,
+                                    legacy_decode=legacy_decode)
+    return logits[:, 0, :], caches
+
+
+def _mask_padded(logits, vocab_size: int):
+    padded = logits.shape[-1]
+    if padded == vocab_size:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, (padded,), 0)
+    return jnp.where(col < vocab_size, logits, NEG_INF)
+
+
+def sample(logits, vocab_size: int, key=None, temperature: float = 0.0):
+    logits = _mask_padded(logits.astype(jnp.float32), vocab_size)
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
+             extras=None, temperature: float = 0.0, seed: int = 0):
+    """Host-side autoregressive loop (examples / tests).
+
+    prompt: (B, S) int32.  Returns (B, S + max_new)."""
+    params = cast_params(params, cfg)
+    B, S = prompt.shape
+    cache_len = S + max_new
+    batch = {"tokens": prompt}
+    if extras:
+        batch.update(extras)
+    pf = jax.jit(functools.partial(prefill_step, cfg=cfg,
+                                   cache_len=cache_len),
+                 static_argnames=())
+    logits, caches = prefill_step(params, cfg, batch, cache_len)
+    key = jax.random.PRNGKey(seed)
+    toks = [prompt]
+    dec = jax.jit(lambda p, b, c, pos: decode_step(p, cfg, b, c, pos))
+    cur = sample(logits, cfg.vocab_size, key, temperature)[:, None]
+    for i in range(max_new):
+        toks.append(cur)
+        if i == max_new - 1:
+            break
+        b = {"tokens": cur}
+        if extras:
+            b.update(extras)
+        logits, caches = dec(params, b, caches, S + i)
+        key, sub = jax.random.split(key)
+        cur = sample(logits, cfg.vocab_size, sub, temperature)[:, None]
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,218 @@
+"""Logical-axis partitioning: maps the models' logical axis names onto mesh
+axes and produces NamedShardings for params, optimizer state and activations.
+
+Parallelism styles composed here (DESIGN.md §3):
+  TP    — "model" axis over heads / d_ff / vocab / experts / ssm inner dims
+  DP    — batch over "data" (and "pod" in the multi-pod mesh)
+  FSDP  — cfg.fsdp additionally shards the weights' "embed" axis over the
+          data axes (all-gather on use, reduce-scatter on grads)
+  EP    — MoE experts over "model" (dispatch/combine become all-to-all)
+  SP    — long-context KV / sequence over "data" (serve shapes)
+
+A rule that does not divide a concrete dim is dropped (replicated) rather
+than erroring — recorded so the dry-run can report it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh):
+    """The data-parallel axes of the mesh ('pod' composes with 'data')."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def base_rules(mesh: Mesh, fsdp: bool) -> dict:
+    d = data_axes(mesh)
+    rules = {
+        "vocab": ("model",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv": ("model",),
+        "experts": ("model",),
+        "experts_r": (),
+        "kv_lora": (),
+        "embed": d if fsdp else (),
+        "layers": (),
+        "ssm_in": ("model",),
+        "ssm_conv": ("model",),
+        "ssm_heads": ("model",),
+        "ssm_inner": ("model",),
+        "vision_in": (),
+        "audio_in": (),
+        None: (),
+    }
+    return rules
+
+
+@dataclasses.dataclass
+class PartitionReport:
+    dropped: list
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Mesh, rules: dict,
+             report: PartitionReport | None = None) -> P:
+    """PartitionSpec for one param leaf.
+
+    A rule that does not divide the dim is dropped; a mesh axis already
+    consumed by an earlier dim is dropped too (e.g. MoE expert tensors map
+    both 'experts' and 'mlp' to "model" — experts win)."""
+    entries = []
+    used: set = set()
+    for dim, ax in zip(shape, axes):
+        mapped = tuple(m for m in rules.get(ax, ()) if m not in used)
+        if not mapped:
+            entries.append(None)
+            continue
+        size = int(np.prod([mesh.shape[m] for m in mapped]))
+        if dim % size != 0:
+            if report is not None:
+                report.dropped.append((ax, dim, mapped))
+            entries.append(None)
+        else:
+            entries.append(mapped if len(mapped) > 1 else mapped[0])
+            used.update(mapped)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _map_with_specs(fn, params: Any, specs: Any) -> Any:
+    """tree.map over params with the parallel spec tree navigated by path
+    (spec leaves are tuples, which jax would treat as pytree nodes)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        ax = specs
+        for k in path:
+            ax = ax[k.key if hasattr(k, "key") else k.idx]
+        out.append(fn(leaf, ax))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(param_shapes: Any, specs: Any, mesh: Mesh, fsdp: bool,
+                    report: PartitionReport | None = None) -> Any:
+    """NamedSharding tree matching ``param_shapes`` (arrays or SDS)."""
+    rules = base_rules(mesh, fsdp)
+    return _map_with_specs(
+        lambda leaf, ax: NamedSharding(
+            mesh, spec_for(tuple(ax), tuple(leaf.shape), mesh, rules,
+                           report)),
+        param_shapes, specs)
+
+
+def tree_pspecs(param_shapes: Any, specs: Any, mesh: Mesh, fsdp: bool) -> Any:
+    rules = base_rules(mesh, fsdp)
+    return _map_with_specs(
+        lambda leaf, ax: spec_for(tuple(ax), tuple(leaf.shape), mesh, rules),
+        param_shapes, specs)
+
+
+# -------------------------------------------------------------- activations
+def batch_pspec(mesh: Mesh) -> P:
+    """(batch, seq, ...) activations: batch over the data axes."""
+    d = data_axes(mesh)
+    return P(d if len(d) > 1 else d[0])
+
+
+def act_pspec(mesh: Mesh, mode: str = "seq") -> P:
+    """Residual-stream constraint (batch, seq, d_model).
+
+    mode="seq" (default): sequence parallelism (Korthikanti et al.) — the
+    residual is sharded over "model" on the *sequence* dim; entering a TP
+    block costs an all-gather over seq and leaving it a reduce-scatter,
+    which replaces the baseline's all-reduce + re-shard churn and keeps
+    stored activations 1/TP-sized.
+    mode="hidden": shard d_model over "model" (original baseline).
+    mode="replicated": batch-only sharding (classic Megatron residual).
+    """
+    d = data_axes(mesh)
+    dd = d if len(d) > 1 else d[0]
+    if mode == "seq":
+        return P(dd, "model", None)
+    if mode == "hidden":
+        return P(dd, None, "model")
+    return P(dd)
+
+
+def cache_pspecs(cfg, mesh: Mesh, batch: int, seq_len: int) -> Any:
+    """PartitionSpec tree matching models.transformer.init_caches.
+
+    Leading [R, T] never sharded.  Batch over the data axes when divisible;
+    otherwise (long_500k, batch=1) the sequence dim takes the data axes too.
+    KV heads go on "model" when divisible, else the sequence dim does
+    (sequence-parallel KV — the attention softmax reduction is then
+    partitioned by GSPMD).
+    """
+    from repro.models import transformer as tfm
+    from repro.models.ssm import ssm_dims
+
+    d = data_axes(mesh)
+    dd = d if len(d) > 1 else d[0]
+    model_n = mesh.shape["model"]
+    dp_n = int(np.prod([mesh.shape[a] for a in d]))
+    batch_ok = batch % dp_n == 0
+    bspec = dd if batch_ok else None
+
+    def seq_axes(L):
+        """Axes for a long sequence dim; soak up idle data axes if batch
+        is unsharded."""
+        if not batch_ok and L % (dp_n * model_n) == 0:
+            return tuple(d) + ("model",)
+        if L % model_n == 0:
+            return "model"
+        return None
+
+    kv_heads = cfg.num_kv_heads
+    heads_ok = kv_heads > 0 and kv_heads % model_n == 0
+
+    def attn_spec():
+        if heads_ok:
+            return P(None, None, bspec, None, "model", None)
+        return P(None, None, bspec, seq_axes(seq_len), None, None)
+
+    def mixer(kind):
+        if kind == "attn":
+            if cfg.mla is not None:
+                s = seq_axes(seq_len)
+                return {"ckv": P(None, None, bspec, s, None),
+                        "kr": P(None, None, bspec, s, None)}
+            return {"k": attn_spec(), "v": attn_spec()}
+        if kind == "ssm":
+            d_in, H, conv_dim = ssm_dims(cfg)
+            h_ax = "model" if H % model_n == 0 else None
+            c_ax = "model" if conv_dim % model_n == 0 else None
+            return {"h": P(None, None, bspec, h_ax, None, None),
+                    "conv": P(None, None, bspec, None, c_ax)}
+        if kind == "cross_attn":
+            return {"ck": P(None, None, bspec, None,
+                            "model" if heads_ok else None, None),
+                    "cv": P(None, None, bspec, None,
+                            "model" if heads_ok else None, None)}
+        if kind == "attn_cross":
+            return {"self": {"k": attn_spec(), "v": attn_spec()},
+                    "cross": mixer("cross_attn")}
+        raise ValueError(kind)
+
+    out = {}
+    for spec in tfm.build_segments(cfg):
+        if spec.stream == "encoder":
+            continue
+        out[spec.name] = {f"l{i}": mixer(spec.mixer_kinds[i])
+                          for i in range(spec.group_size)}
+    return out
+
+
+def cache_shardings(cfg, mesh: Mesh, batch: int, seq_len: int) -> Any:
+    ps = cache_pspecs(cfg, mesh, batch, seq_len)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), ps,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

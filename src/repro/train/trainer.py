@@ -1,0 +1,87 @@
+"""Training step: mixed-precision forward (fp32 master -> bf16 compute),
+remat scan over PRM blocks, optional gradient accumulation, AdamW update.
+
+The same ``train_step`` is what the multi-pod dry-run lowers, so everything
+here must be shape-static and SPMD-cleanly shardable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+NEG_INF = -1e30
+
+
+def cross_entropy(logits, targets, vocab_size: int, pad_id: int = -1):
+    """Next-token CE with padded-vocab masking (the pad columns never win)."""
+    lf = logits.astype(jnp.float32)
+    padded = lf.shape[-1]
+    if padded != vocab_size:
+        col = jax.lax.broadcasted_iota(jnp.int32, (padded,), 0)
+        lf = jnp.where(col < vocab_size, lf, NEG_INF)
+    ls = jax.nn.log_softmax(lf, axis=-1)
+    nll = -jnp.take_along_axis(ls, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != pad_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _loss_with_mask(params, cfg, batch, act_pspec, aux_weight, remat):
+    compute = jax.tree.map(
+        lambda p: p.astype(cfg.compute_dtype)
+        if p.dtype == jnp.float32 else p, params)
+    logits, _, aux = tfm.forward(compute, cfg, batch, mode="train",
+                                 act_pspec=act_pspec, remat=remat)
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    ce = cross_entropy(logits[:, :-1], targets, cfg.vocab_size)
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, act_pspec=None,
+                    remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With tcfg.microbatch > 0 the global batch is split into microbatches and
+    gradients are accumulated in a lax.scan (grad-accumulation pipeline)."""
+
+    def grads_of(params, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            _loss_with_mask, has_aux=True)(params, cfg, batch, act_pspec,
+                                           0.01, remat)
+        return loss, ce, aux, grads
+
+    def train_step(params, opt_state, batch):
+        mb = tcfg.microbatch
+        if mb and mb > 1:
+            B = batch["tokens"].shape[0]
+            assert B % mb == 0
+            split = jax.tree.map(
+                lambda x: x.reshape(mb, B // mb, *x.shape[1:]), batch)
+
+            def micro(acc, mbatch):
+                loss, ce, aux, g = grads_of(params, mbatch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + loss), ce
+
+            # grads w.r.t. fp32 master params are fp32 (the bf16 cast sits
+            # inside the graph); accumulate in fp32
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, jnp.float32(0.0)),
+                                           split)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+        else:
+            loss, ce, aux, grads = grads_of(params, batch)
+        params, opt_state, om = adamw.update(params, grads, opt_state, tcfg)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step

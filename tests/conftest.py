@@ -1,0 +1,18 @@
+import jax
+import pytest
+from hypothesis import HealthCheck, settings
+
+# JIT compilation makes first examples slow; disable wall-clock deadlines.
+settings.register_profile(
+    "jax", deadline=None, max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("jax")
+
+# Tests run on the single CPU device (the 512-device XLA flag is set ONLY by
+# launch/dryrun.py).  Keep x64 off to match TPU-ish numerics.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

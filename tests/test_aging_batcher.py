@@ -1,0 +1,81 @@
+"""Tests: aging/endurance model (paper §4.2.3) and the wave batcher."""
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+import jax
+
+from repro.core import aging
+from repro.core.prm import ReuseConfig, ReusePlan
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.serve.batcher import Request, WaveBatcher
+
+
+# ---------------------------------------------------------------- aging
+def test_drift_monotone_in_writes():
+    d1 = aging.expected_drift_nm(1e3)
+    d2 = aging.expected_drift_nm(1e6)
+    assert 0 < d1 < d2
+
+
+def test_endurance_threshold_consistent():
+    ew = aging.endurance_writes()
+    assert aging.expected_drift_nm(ew * 0.9) < aging.AgingConfig().tolerance_nm
+    assert aging.expected_drift_nm(ew * 1.2) > aging.AgingConfig().tolerance_nm
+
+
+@given(R=st.integers(1, 6), T=st.integers(1, 8))
+def test_endurance_gain_equals_reuse_factor(R, T):
+    plan = ReusePlan.build(R * T, ReuseConfig(num_basic=R, reuse_times=T))
+    assert aging.endurance_gain(plan) == pytest.approx(T)
+
+
+def test_lifetime_report_rb_outlasts_baseline():
+    plan = ReusePlan.build(8, ReuseConfig(num_basic=2, reuse_times=4))
+    rep = aging.lifetime_report(plan)
+    assert rep["rb_days"] == pytest.approx(rep["baseline_days"] * 4)
+    assert rep["trim_power_after_30d_rb_w"] < \
+        rep["trim_power_after_30d_baseline_w"]
+
+
+# --------------------------------------------------------------- batcher
+def _tiny_cfg():
+    return ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
+                       compute_dtype="float32")
+
+
+def test_wave_batcher_completes_all_requests():
+    cfg = _tiny_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    b = WaveBatcher(params, cfg, wave_size=3)
+    rng = np.random.default_rng(0)
+    for rid in range(7):
+        plen = int(rng.integers(4, 12))
+        b.submit(Request(rid=rid,
+                         prompt=rng.integers(1, 128, plen).astype(np.int32),
+                         max_new=4))
+    comps = b.drain()
+    assert sorted(c.rid for c in comps) == list(range(7))
+    for c in comps:
+        assert len(c.tokens) == c.prompt_len + 4
+        assert (c.tokens < cfg.vocab_size).all()
+    assert b.stats.waves == 3            # 3 + 3 + 1
+    assert b.stats.requests == 7
+    assert 0.0 <= b.stats.padding_overhead < 0.5
+
+
+def test_wave_batcher_longest_first_reduces_padding():
+    cfg = _tiny_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    b = WaveBatcher(params, cfg, wave_size=2)
+    lengths = [4, 16, 4, 16]
+    for rid, plen in enumerate(lengths):
+        b.submit(Request(rid=rid,
+                         prompt=np.arange(1, plen + 1, dtype=np.int32),
+                         max_new=2))
+    b.drain()
+    # sorted waves pair 16-with-16 and 4-with-4: zero padding
+    assert b.stats.padded_tokens == 0

@@ -1,0 +1,207 @@
+"""Unit + hypothesis property tests for the R&B core (PRM / OBU / photonic /
+cost model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import costmodel, obu, photonic
+from repro.core.prm import ReuseConfig, ReusePlan, no_reuse
+
+
+# ======================================================================
+# PRM
+# ======================================================================
+@given(R=st.integers(1, 8), T=st.integers(1, 8))
+def test_prm_plan_cover(R, T):
+    """Every logical layer is covered exactly once; each physical block is
+    used exactly T times (the paper's eq. 4/5 schedule)."""
+    plan = ReusePlan.build(R * T, ReuseConfig(num_basic=R, reuse_times=T))
+    plan.validate_cover()
+    assert plan.param_reduction() == pytest.approx(1.0 - R / (R * T))
+    assert plan.mrr_write_programs() == R
+    assert plan.baseline_write_programs() == R * T
+
+
+def test_prm_depth_mismatch_raises():
+    with pytest.raises(ValueError):
+        ReusePlan.build(7, ReuseConfig(num_basic=2, reuse_times=2))
+
+
+def test_no_reuse_is_identity_schedule():
+    plan = ReusePlan.build(5, None)
+    assert plan.num_physical == 5
+    assert all(a.reuse_index == 0 for a in plan.assignments)
+
+
+# ======================================================================
+# OBU
+# ======================================================================
+@given(groups=st.sampled_from([2, 4, 8]), mult=st.integers(1, 6))
+def test_group_shuffle_is_permutation(groups, mult):
+    c = groups * mult * 2
+    perm = obu.group_shuffle_permutation(c, groups)
+    assert sorted(perm) == list(range(c))
+    inv = obu.invert_permutation(perm)
+    assert (perm[inv] == np.arange(c)).all()
+
+
+@given(block=st.sampled_from([1, 2, 4]), nblk=st.integers(2, 16),
+       seed=st.integers(0, 100))
+def test_blocked_shuffle_is_permutation(block, nblk, seed):
+    c = block * nblk
+    perm = obu.blocked_random_permutation(c, block, seed)
+    assert sorted(perm) == list(range(c))
+    # blocks move atomically
+    for b in range(nblk):
+        blkvals = perm[b * block:(b + 1) * block]
+        assert (np.diff(blkvals) == 1).all()
+
+
+def test_group_shuffle_matches_permutation_vector():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 24))
+    y1 = obu.group_shuffle(x, 4)
+    perm = obu.group_shuffle_permutation(24, 4)
+    y2 = obu.apply_channel_permutation(x, perm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_shuffle_roundtrip_via_inverse():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32))
+    perm = obu.blocked_random_permutation(32, 4, seed=7)
+    inv = obu.invert_permutation(perm)
+    y = obu.apply_channel_permutation(x, perm)
+    x2 = obu.apply_channel_permutation(y, inv)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x2))
+
+
+@given(n=st.sampled_from([4, 8, 16]))
+def test_blend_dot_transpose_semantics(n):
+    """blend_dot(..., transpose=True) == x @ w.T without materializing w.T
+    — the OBU vertical-input path (paper Fig. 3)."""
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (3, n))
+    w = jax.random.normal(jax.random.PRNGKey(n + 1), (n, n))
+    np.testing.assert_allclose(np.asarray(obu.blend_dot(x, w, transpose=True)),
+                               np.asarray(x @ w.T), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(obu.blend_dot(x, w, transpose=False)),
+        np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+
+
+# ======================================================================
+# photonic simulator
+# ======================================================================
+def test_offset_decomposition_exact():
+    """W x == 2 (W' x - W0 x)  (paper eq. 6) for weights in [-1, 1]."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.uniform(key, (16, 12), minval=-1.0, maxval=1.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 16))
+    wp = photonic.offset_decompose(w)
+    assert float(wp.min()) >= 0.0 and float(wp.max()) <= 1.0
+    y = photonic.offset_recompose_mvm(x @ wp, jnp.sum(x, -1, keepdims=True))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_photonic_matmul_equals_w8a8():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 24))
+    y1 = photonic.photonic_matmul(x, w)
+    y2 = photonic.w8a8_matmul_reference(x, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(bits=st.sampled_from([4, 8]), rows=st.integers(2, 20))
+@settings(deadline=None)
+def test_quantization_bounds(bits, rows):
+    x = jax.random.normal(jax.random.PRNGKey(rows), (rows, 8))
+    q, scale = photonic.quantize_symmetric(x, bits)
+    qmax = 2 ** (bits - 1) - 1
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= qmax + 1
+    err = jnp.abs(photonic.dequantize(q, scale) - x)
+    assert float(jnp.max(err)) <= float(scale) * 0.5 + 1e-6
+
+
+def test_write_noise_perturbs():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 24))
+    noisy = photonic.photonic_matmul(
+        x, w, photonic.PhotonicConfig(write_noise_sigma=2.0),
+        noise_key=jax.random.PRNGKey(2))
+    clean = photonic.photonic_matmul(x, w)
+    assert not bool(jnp.allclose(noisy, clean))
+
+
+def test_crossbar_tiling():
+    assert photonic.mrr_tiles(256, 256, 8) == 32 * 32
+    assert photonic.mrr_tiles(250, 250, 8) == 32 * 32
+    assert photonic.crossbar_utilization((8, 8), 8) == 1.0
+
+
+# ======================================================================
+# cost model — Table 2 + Table 3 reproduction
+# ======================================================================
+TABLE3 = {64: (217190, 35.70, 77490, 12.50),
+          256: (54297, 9.68, 20197, 3.35),
+          1024: (13574, 3.17, 5874, 1.06)}
+
+
+@pytest.mark.parametrize("tile", sorted(TABLE3))
+def test_table3_reproduction(tile):
+    d_no, e_no, d_re, e_re = TABLE3[tile]
+    no = costmodel.matrix_cost(256, 256, tile, programs=8, passes=8)
+    re = costmodel.matrix_cost(256, 256, tile, programs=1, passes=8)
+    assert no.delay_ns == pytest.approx(d_no, rel=1e-3)
+    assert re.delay_ns == pytest.approx(d_re, rel=1e-3)
+    assert no.energy_uJ == pytest.approx(e_no, rel=5e-3)
+    assert re.energy_uJ == pytest.approx(e_re, rel=5e-3)
+
+
+def test_paper_headline_claims():
+    """69% energy (2x2 mixer-class sharing), 57% latency (tile 1024)."""
+    no = costmodel.matrix_cost(256, 256, 1024, programs=8, passes=8)
+    re = costmodel.matrix_cost(256, 256, 1024, programs=1, passes=8)
+    assert 1 - re.delay_ns / no.delay_ns == pytest.approx(0.567, abs=0.01)
+    # block-wise 2x2: 4 logical blocks from 2 programs
+    no4 = costmodel.matrix_cost(256, 256, 64, programs=4, passes=4)
+    re4 = costmodel.matrix_cost(256, 256, 64, programs=2, passes=4)
+    assert 1 - re4.energy_uJ / no4.energy_uJ > 0.30
+
+
+@given(K=st.integers(1, 16), C=st.integers(1, 8),
+       N=st.sampled_from([64, 256, 1024]), B=st.sampled_from([8, 16, 32]))
+def test_table2_ours_dominates(K, C, N, B):
+    ours = costmodel.table2_row("ours", M=N, N=N, K=K, C=C, B=B)
+    holy = costmodel.table2_row("holylight", M=N, N=N, K=K, C=C, B=B)
+    assert ours["programming_times"] <= holy["programming_times"]
+    assert ours["power"] <= holy["power"]
+    assert ours["latency"] <= holy["latency"]
+
+
+@given(R=st.integers(1, 8), T=st.integers(1, 4))
+def test_stack_cost_monotone_in_sharing(R, T):
+    """More reuse from fewer programs never costs more energy."""
+    plan = ReusePlan.build(R * T, ReuseConfig(num_basic=R, reuse_times=T))
+    shapes = [(128, 128), (128, 512)]
+    shared = costmodel.stack_cost(shapes, plan, tile=8)
+    base = costmodel.baseline_stack_cost(shapes, R * T, tile=8)
+    assert shared.energy_uJ <= base.energy_uJ + 1e-9
+    assert shared.delay_ns <= base.delay_ns + 1e-9
+
+
+def test_energy_breakdown_sums_to_total():
+    c = costmodel.matrix_cost(256, 256, 64, programs=2, passes=8)
+    br = costmodel.energy_breakdown(c)
+    parts = sum(v for k, v in br.items() if k != "total")
+    assert parts == pytest.approx(br["total"], rel=1e-6)
+
+
+def test_roofline_terms():
+    t = costmodel.roofline_terms(flops=1e15, hbm_bytes=1e12, coll_bytes=1e11,
+                                 chips=256)
+    assert t["dominant"] == "t_compute_s"
+    assert 0 < t["roofline_fraction"] <= 1.0

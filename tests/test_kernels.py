@@ -1,0 +1,187 @@
+"""Per-kernel allclose tests against the pure-jnp oracles in kernels/ref.py.
+
+Kernels execute in interpret mode on CPU (kernel bodies run in Python);
+shape/dtype sweeps cover padding paths and MXU-aligned and unaligned sizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import obu
+from repro.core.photonic import photonic_matmul
+from repro.kernels import ops, ref
+from repro.kernels.photonic_mvm import photonic_mvm
+
+
+# ======================================================================
+# photonic MVM
+# ======================================================================
+@pytest.mark.parametrize("M,K,N", [(16, 32, 24), (128, 128, 128),
+                                   (100, 200, 50), (1, 64, 8),
+                                   (130, 257, 129)])
+def test_photonic_mvm_vs_ref(M, K, N):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M + K + N))
+    xq = jax.random.randint(k1, (M, K), -127, 128, dtype=jnp.int8)
+    wq = jax.random.randint(k2, (K, N), -127, 128, dtype=jnp.int8)
+    xs = jnp.float32(0.013)
+    ws = jax.random.uniform(jax.random.PRNGKey(0), (N,), minval=0.1,
+                            maxval=2.0)
+    got = photonic_mvm(xq, wq, xs, ws, bm=32, bk=64, bn=32, interpret=True)
+    want = ref.photonic_mvm_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_photonic_kernel_matches_simulator(dtype):
+    """Kernel path == core.photonic.photonic_matmul (the faithful sim)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (24, 48)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 40))
+    got = ops.photonic_matmul_kernel(x, w, bm=16, bk=16, bn=16)
+    want = photonic_matmul(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_photonic_mvm_offset_exactness():
+    """Offset decomposition inside the kernel is exact (not approximate):
+    against full-range int weights the kernel equals the plain matmul."""
+    xq = jnp.arange(-8, 8, dtype=jnp.int8).reshape(2, 8)
+    wq = (jnp.arange(64, dtype=jnp.int32) % 255 - 127).astype(
+        jnp.int8).reshape(8, 8)
+    got = photonic_mvm(xq, wq, jnp.float32(1.0), jnp.ones((8,)),
+                       bm=8, bk=8, bn=8, interpret=True)
+    want = xq.astype(jnp.float32) @ wq.astype(jnp.float32) / 127.0
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+# ======================================================================
+# blend (blocked shuffle + bias + act)
+# ======================================================================
+@pytest.mark.parametrize("nblk,block,act", [(4, 8, "relu"), (8, 16, "silu"),
+                                            (2, 128, "none")])
+def test_blend_shuffle_vs_ref(nblk, block, act):
+    C = nblk * block
+    M = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, C))
+    bias = jax.random.normal(jax.random.PRNGKey(1), (C,))
+    perm = np.random.default_rng(3).permutation(nblk)
+    got = ops.blend_shuffle(x, bias, perm, block=block, activation=act)
+    want = ref.blend_shuffle_ref(x, bias, perm, block, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_blend_matches_obu_blocked_permutation():
+    """Kernel blocked shuffle == core.obu.blocked_random_permutation gather."""
+    C, block = 64, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, C))
+    perm_c = obu.blocked_random_permutation(C, block, seed=5)
+    block_perm = perm_c.reshape(-1, block)[:, 0] // block
+    got = ops.blend_shuffle(x, jnp.zeros((C,)), block_perm, block=block,
+                            activation="none")
+    want = obu.apply_channel_permutation(x, perm_c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ======================================================================
+# flash attention
+# ======================================================================
+@pytest.mark.parametrize("S,hd,causal", [(64, 16, True), (128, 32, True),
+                                         (64, 16, False), (256, 8, True)])
+def test_flash_attention_vs_ref(S, hd, causal):
+    B, H = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    got = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=causal)
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, S, H, hd = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd)).astype(dtype)
+    got = ops.flash_attention(q, k, v, bq=32, bk=32)
+    assert got.dtype == dtype
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.flash_attention_ref(qf, kf, vf).reshape(
+        B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ======================================================================
+# SSD chunk kernel
+# ======================================================================
+@pytest.mark.parametrize("L,H,P,N", [(16, 2, 8, 4), (32, 4, 16, 8),
+                                     (64, 1, 32, 16)])
+def test_ssd_chunk_vs_ref(L, H, P, N):
+    b, nc = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(L + H), 4)
+    x = jax.random.normal(ks[0], (b, nc, L, H, P))
+    dA = -jax.nn.softplus(jax.random.normal(ks[1], (b, nc, H, L)))
+    B = jax.random.normal(ks[2], (b, nc, L, H, N))
+    C = jax.random.normal(ks[3], (b, nc, L, H, N))
+    y_got, st_got = ops.ssd_chunk(x, dA, B, C)
+    y_want, st_want = ref.ssd_chunk_ref(x, dA, B, C)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(st_got), np.asarray(st_want).transpose(0, 1, 2, 3, 4),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_composes_to_full_ssd():
+    """Kernel y_diag/states + JAX inter-chunk scan == models.ssm oracle."""
+    from repro.models.ssm import ssd_reference
+    b, S, H, P, N, L = 1, 32, 2, 8, 4, 8
+    nc = S // L
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (b, S, 1, N))
+    Cm = jax.random.normal(ks[4], (b, S, 1, N))
+    # assemble chunked inputs exactly as models.ssm does
+    xdt = (x * dt[..., None]).reshape(b, nc, L, H, P)
+    dA = (dt * A).reshape(b, nc, L, H).transpose(0, 1, 3, 2)
+    Bh = jnp.repeat(Bm, H, axis=2).reshape(b, nc, L, H, N)
+    Ch = jnp.repeat(Cm, H, axis=2).reshape(b, nc, L, H, N)
+    y_diag, states = ops.ssd_chunk(xdt, dA, Bh, Ch)
+    # inter-chunk scan
+    cs = jnp.cumsum(dA, axis=-1)
+    chunk_decay = jnp.exp(cs[..., -1])
+    def step(h, inp):
+        st, dec = inp
+        return h * dec[:, :, None, None] + st, h
+    h0 = jnp.zeros((b, H, N, P))
+    hT, h_prev = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)          # (b,nc,H,N,P)
+    state_decay = jnp.exp(cs).transpose(0, 1, 3, 2)   # (b,nc,L,H)
+    y_off = jnp.einsum("bclhn,bchnp,bclh->bclhp", Ch, h_prev, state_decay)
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    want, hT_want = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(hT.transpose(0, 1, 3, 2)),
+                               np.asarray(hT_want), rtol=5e-4, atol=5e-4)
