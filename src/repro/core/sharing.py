@@ -90,7 +90,11 @@ def _delta_update(cache_leaf, delta, r, t, pos):
     If the update has the slice's full shape it replaces the [r, t] slice
     (SSM state, conv tail).  If exactly one dim is 1 where the cache has L
     (a one-token KV delta), only that token is written at ``pos`` — this is
-    what keeps decode HBM traffic at ~1x cache read + epsilon write."""
+    what keeps decode HBM traffic at ~1x cache read + epsilon write.
+
+    ``pos`` may be a scalar (aligned decode: one position for the whole
+    batch) or a (B,) vector (continuous decode: slot ``b``'s token lands at
+    ``pos[b]``; the write becomes a per-row scatter)."""
     slice_shape = cache_leaf.shape[2:]
     up = delta.astype(cache_leaf.dtype)
     if tuple(up.shape) == tuple(slice_shape):
@@ -100,6 +104,15 @@ def _delta_update(cache_leaf, delta, r, t, pos):
             if a != b]
     assert len(diff) == 1 and up.shape[diff[0]] == 1, (
         f"cache delta {up.shape} incompatible with slice {slice_shape}")
+    if jnp.ndim(pos) == 1:
+        # per-slot positions: the cache slice must be (B, L, ...) with the
+        # one-token delta on axis 1 so each row scatters independently
+        assert diff[0] == 1 and up.shape[0] == pos.shape[0], (
+            f"per-slot delta {up.shape} needs batch-leading slice "
+            f"{slice_shape} and one position per slot ({pos.shape})")
+        B = up.shape[0]
+        return cache_leaf.at[r, t, jnp.arange(B), pos].set(
+            jnp.squeeze(up, axis=1))
     idx = [r, t] + [0] * len(slice_shape)
     idx[2 + diff[0]] = pos
     return jax.lax.dynamic_update_slice(cache_leaf, up[None, None],
@@ -127,7 +140,10 @@ def run_stack(block_fn: BlockFn, params: Any, x: jax.Array,
       decode_pos: when set (decode mode), the cache travels as the scan
         CARRY — XLA aliases loop carries in place — and block_fn cache
         returns are treated as deltas written via dynamic_update_slice
-        (one token for KV caches, full slice for SSM state).
+        (one token for KV caches, full slice for SSM state).  A scalar
+        writes every batch row at the same position (aligned decode); a
+        (B,) vector writes row ``b`` at ``decode_pos[b]`` (continuous
+        slot-level decode, DESIGN.md §Serving).
 
     Returns (x, new_cache, aux).
     """

@@ -268,6 +268,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
     except Exception as e:  # CPU backend may not support it
         result["memory"] = {"error": str(e)[:200]}
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):    # older jax returns [dict]
+        cost = cost[0] if cost else {}
     # NOTE: cost_analysis counts while (scan) bodies ONCE — reported raw for
     # transparency; the roofline uses analytic FLOPs/bytes + trip-corrected
     # collectives (launch/analysis.py, EXPERIMENTS.md §Method).

@@ -1,13 +1,20 @@
-"""Serving driver: batched prefill + decode with the PRM-shared caches.
+"""Serving driver: continuous-batching scheduler over the PRM-shared caches.
 
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \\
-      --batch 4 --prompt-len 32 --new-tokens 16
+      --requests 12 --max-prompt 32 --new-tokens 16
+
+``--scheduler`` picks the serving path:
+  continuous  slot-level continuous batching (default; serve/scheduler.py)
+  wave        static aligned waves (fallback; serve/batcher.py)
+  engine      one aligned batch straight through engine.generate
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +22,35 @@ import jax.numpy as jnp
 from repro.configs import get_arch, smoke_variant
 from repro.models import transformer as tfm
 from repro.serve import engine
+from repro.serve.batcher import Request, WaveBatcher
+from repro.serve.scheduler import ContinuousScheduler
+
+
+def _request_extras(cfg, rid: int):
+    if cfg.family == "vlm":
+        v = cfg.vision
+        return {"image_embeds": jax.random.normal(
+            jax.random.PRNGKey(100 + rid), (1, v.num_image_tokens,
+                                            v.d_vision))}
+    if cfg.family == "audio":
+        a = cfg.audio
+        return {"audio_embeds": jax.random.normal(
+            jax.random.PRNGKey(100 + rid), (1, a.num_frames, a.d_audio))}
+    return None
+
+
+def _make_trace(cfg, n: int, max_prompt: int, max_new: int, seed: int = 0):
+    """Mixed-length request trace (the realistic serving distribution)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
+        mn = int(rng.integers(max(1, max_new // 4), max_new + 1))
+        reqs.append(Request(
+            rid=rid, prompt=rng.integers(1, cfg.vocab_size, plen
+                                         ).astype(np.int32),
+            max_new=mn, extras=_request_extras(cfg, rid)))
+    return reqs
 
 
 def main(argv=None):
@@ -22,36 +58,60 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--reuse", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "wave", "engine"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="slot-pool capacity / wave size")
+    ap.add_argument("--max-prompt", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
     cfg = smoke_variant(args.arch) if args.smoke else get_arch(
         args.arch, reuse=args.reuse)
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
-    key = jax.random.PRNGKey(1)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 1,
-                                cfg.vocab_size)
-    extras = {}
-    if cfg.family == "vlm":
-        v = cfg.vision
-        extras["image_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2), (args.batch, v.num_image_tokens,
-                                    v.d_vision))
-    if cfg.family == "audio":
-        a = cfg.audio
-        extras["audio_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(3), (args.batch, a.num_frames, a.d_audio))
+
+    if args.scheduler == "engine":
+        prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (args.capacity, args.max_prompt), 1,
+                                    cfg.vocab_size)
+        extras = _request_extras(cfg, 0)
+        if extras:
+            extras = {k: jnp.repeat(v, args.capacity, axis=0)
+                      for k, v in extras.items()}
+        t0 = time.time()
+        out = engine.generate(params, cfg, prompt, args.new_tokens,
+                              extras=extras, temperature=args.temperature)
+        dt = time.time() - t0
+        n_new = args.capacity * args.new_tokens
+        print(f"[serve/engine] {cfg.name}: {n_new} tokens in {dt:.2f}s "
+              f"({n_new / dt:.1f} tok/s on CPU)")
+        print("sample row:", out[0, :].tolist()[:48])
+        return
+
+    reqs = _make_trace(cfg, args.requests, args.max_prompt, args.new_tokens)
+    if args.scheduler == "wave":
+        sched = WaveBatcher(params, cfg, wave_size=args.capacity,
+                            temperature=args.temperature)
+    else:
+        sched = ContinuousScheduler(
+            params, cfg, capacity=args.capacity,
+            max_len=args.max_prompt + args.new_tokens,
+            temperature=args.temperature)
+    for r in reqs:
+        sched.submit(r)
     t0 = time.time()
-    out = engine.generate(params, cfg, prompt, args.new_tokens,
-                          extras=extras or None,
-                          temperature=args.temperature)
+    comps = sched.drain()
     dt = time.time() - t0
-    n_new = args.batch * args.new_tokens
-    print(f"[serve] {cfg.name}: generated {n_new} tokens in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s on CPU)")
-    print("sample row:", out[0, :].tolist()[:48])
+    st = sched.stats
+    gen = st.generated_tokens
+    print(f"[serve/{args.scheduler}] {cfg.name}: {len(comps)} requests, "
+          f"{gen} new tokens in {dt:.2f}s ({gen / dt:.1f} tok/s on CPU)")
+    print(f"  slot-steps executed {st.slot_steps}, useful {st.useful_steps}, "
+          f"overhead {st.overhead:.1%}")
+    comps.sort(key=lambda c: c.rid)
+    if comps:
+        print("  first completion:", comps[0].tokens.tolist()[:48])
 
 
 if __name__ == "__main__":

@@ -6,8 +6,10 @@ Cache layouts (per logical layer; stacked [R, T, ...] by the PRM runner):
   mla:    {"ckv": (B, L, kv_lora), "kr": (B, L, rope_dim)}   (compressed!)
   cross:  {"ck": (B, M, KV, hd), "cv": (B, M, KV, hd)}       (encoder memory)
 
-Decode steps take a scalar ``pos`` (aligned batched decode) and use
-dynamic_update_slice into the cache.  Softmax is always fp32.
+Decode steps take ``pos`` as either a scalar (aligned batched decode — every
+slot at the same position) or a ``(B,)`` int vector (continuous batching —
+each slot at its own position; DESIGN.md §Serving).  The cache mask and RoPE
+angles are per-slot in the vector case.  Softmax is always fp32.
 """
 from __future__ import annotations
 
@@ -28,6 +30,25 @@ def _maybe_t(x, w, transpose):
     if transpose and w.shape[0] == w.shape[1]:
         return blend_dot(x, w, transpose=True)
     return blend_dot(x, w, transpose=False)
+
+
+def _past_valid(pos, L):
+    """(B|1, L) bool mask of cache entries strictly before ``pos``.
+
+    pos scalar -> (1, L) broadcast over the batch (aligned decode);
+    pos (B,)   -> (B, L) per-slot visibility (continuous decode)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return (jnp.arange(L) < pos)[None, :]
+    return jnp.arange(L)[None, :] < pos[:, None]
+
+
+def _decode_positions(pos):
+    """Position array for RoPE at decode: (1,) shared or (B, 1) per-slot."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.reshape(pos, (1,))
+    return pos[:, None]
 
 
 # =========================================================================
@@ -140,7 +161,7 @@ def _attend_decode(q, ck, cv, k_new, v_new, pos):
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     s_c = jnp.einsum("bskgh,blkh->bkgsl", qg, ck,
                      preferred_element_type=jnp.float32) * scale
-    s_c = jnp.where((jnp.arange(L) < pos)[None, None, None, None, :],
+    s_c = jnp.where(_past_valid(pos, L)[:, None, None, None, :],
                     s_c, NEG_INF)
     s_n = jnp.einsum("bskgh,blkh->bkgsl", qg, k_new.astype(q.dtype),
                      preferred_element_type=jnp.float32) * scale
@@ -159,16 +180,15 @@ def _attend_decode(q, ck, cv, k_new, v_new, pos):
 
 def gqa_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
     """Single-token decode: x (B,1,d); cache k/v (B,L,KV,hd) read-only;
-    pos scalar.  Returns the one-token cache *delta* — the stack runner
-    writes it in place."""
+    pos scalar or (B,) per-slot.  Returns the one-token cache *delta* — the
+    stack runner writes it in place."""
     B, S, d = x.shape
     assert S == 1
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, 1, H, hd)
     k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
     v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
-    posv = jnp.reshape(pos, (1,))
-    cos, sin = rope_angles(posv, hd, cfg.rope_theta)
+    cos, sin = rope_angles(_decode_positions(pos), hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     out = _attend_decode(q, cache["k"], cache["v"], k, v, pos)
@@ -278,8 +298,7 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
     B, S, _ = x.shape
     assert S == 1
     H = cfg.num_heads
-    posv = jnp.reshape(pos, (1,))
-    qn, qr, ckv_new, kr_new = _mla_qkr(p, cfg, x, posv)
+    qn, qr, ckv_new, kr_new = _mla_qkr(p, cfg, x, _decode_positions(pos))
     ckv, kr = cache["ckv"], cache["kr"]
     L = ckv.shape[1]
     w_ukv = p["w_ukv"].astype(x.dtype).reshape(
@@ -292,7 +311,7 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
                       preferred_element_type=jnp.float32)
            + jnp.einsum("bshr,blr->bhsl", qr, kr,
                         preferred_element_type=jnp.float32)) * scale
-    s_c = jnp.where((jnp.arange(L) < pos)[None, None, None, :], s_c, NEG_INF)
+    s_c = jnp.where(_past_valid(pos, L)[:, None, None, :], s_c, NEG_INF)
     s_n = (jnp.einsum("bshr,blr->bhsl", q_lat, ckv_new.astype(x.dtype),
                       preferred_element_type=jnp.float32)
            + jnp.einsum("bshr,blr->bhsl", qr, kr_new.astype(x.dtype),

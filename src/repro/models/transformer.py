@@ -353,7 +353,9 @@ def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
     batch: {"tokens": (B, S)} plus modality extras:
       vlm:   {"image_embeds": (B, M, d_vision)}
       audio: {"audio_embeds": (B, F, d_audio)}
-    mode: train | prefill | decode (decode: S == 1 and ``pos`` is a scalar).
+    mode: train | prefill | decode (decode: S == 1 and ``pos`` is a scalar —
+      aligned batch — or a (B,) int vector of per-slot positions for the
+      continuous scheduler; legacy_decode supports scalar ``pos`` only).
     caches: pytree {segment: [R, T, {...}]} (prefill output / decode in-out).
     Returns (logits, new_caches, aux).
     """

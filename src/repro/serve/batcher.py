@@ -7,8 +7,10 @@ aligned-batch engines whose decode step shares a single position counter
 (ours does: the PRM cache layout keeps all slots in lockstep).
 
 This is deliberately a *static* scheduler: requests never join a running
-wave.  A continuous (slot-level) scheduler needs per-slot positions in the
-attention mask — noted in DESIGN.md as future work.
+wave.  It is kept as the simple fallback behind the shared ``Scheduler``
+protocol; the production path is ``serve.scheduler.ContinuousScheduler``,
+which decodes with per-slot positions over a ``serve.slots.SlotPool``
+(DESIGN.md §Serving).
 """
 from __future__ import annotations
 
@@ -30,6 +32,7 @@ class Request:
     prompt: np.ndarray             # (prompt_len,) int32
     max_new: int
     extras: Optional[dict] = None
+    eos_id: Optional[int] = None   # early stop (continuous scheduler only)
 
 
 @dataclasses.dataclass
@@ -38,6 +41,7 @@ class Completion:
     tokens: np.ndarray             # (prompt_len + n_generated,)
     prompt_len: int
     padded_to: int
+    finish_reason: str = "length"  # length | eos
 
 
 @dataclasses.dataclass
@@ -47,32 +51,61 @@ class WaveStats:
     prompt_tokens: int = 0
     padded_tokens: int = 0
     generated_tokens: int = 0
+    slot_steps: int = 0           # executed slot-token-steps (incl. padding
+                                  # and decode lanes past a request's max_new)
+    useful_steps: int = 0         # prompt tokens + kept generated tokens
 
     @property
     def padding_overhead(self) -> float:
         total = self.prompt_tokens + self.padded_tokens
         return self.padded_tokens / total if total else 0.0
 
+    @property
+    def overhead(self) -> float:
+        """Wasted fraction of executed slot-token-steps — the metric shared
+        with ContinuousStats so the two schedulers compare directly."""
+        return (1.0 - self.useful_steps / self.slot_steps
+                if self.slot_steps else 0.0)
+
 
 class WaveBatcher:
     """Admit requests, emit completions wave by wave."""
 
     def __init__(self, params, cfg: ModelConfig, wave_size: int = 8,
-                 pad_id: int = 0):
+                 pad_id: int = 0, temperature: float = 0.0):
         self.params = engine.cast_params(params, cfg)
         self.cfg = cfg
         self.wave_size = wave_size
         self.pad_id = pad_id
+        self.temperature = temperature
         self.queue: list[Request] = []
         self.stats = WaveStats()
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @staticmethod
+    def _extras_match(a: Optional[dict], b: Optional[dict]) -> bool:
+        """Wave-compatible extras: same keys, identical arrays.  A wave runs
+        ONE batched prefill, so per-request modality inputs (image/audio
+        embeddings) can only share a wave when they are equal."""
+        if (a is None) != (b is None):
+            return False
+        if a is None:
+            return True
+        if set(a) != set(b):
+            return False
+        return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+                   for k in a)
+
     def _form_wave(self) -> list[Request]:
-        # longest-prompt-first within the queue head window minimizes padding
-        window = sorted(self.queue[:4 * self.wave_size],
-                        key=lambda r: -len(r.prompt))
+        # group by matching extras (never silently apply request 0's extras
+        # to the whole wave), then longest-prompt-first within the queue
+        # head window to minimize padding
+        head = self.queue[0]
+        window = [r for r in self.queue[:4 * self.wave_size]
+                  if self._extras_match(r.extras, head.extras)]
+        window.sort(key=lambda r: -len(r.prompt))
         wave = window[:self.wave_size]
         for r in wave:
             self.queue.remove(r)
@@ -87,9 +120,10 @@ class WaveBatcher:
             # left-pad so every prompt ends at the same position (the
             # aligned decode then starts all slots together)
             prompts[i, max_prompt - len(r.prompt):] = r.prompt
-        extras = wave[0].extras
+        extras = wave[0].extras      # every wave member matches (_form_wave)
         out = engine.generate(self.params, self.cfg, jnp.asarray(prompts),
-                              max_new, extras=extras)
+                              max_new, extras=extras,
+                              temperature=self.temperature)
         out = np.asarray(out)
         comps = []
         for i, r in enumerate(wave):
@@ -101,8 +135,12 @@ class WaveBatcher:
             self.stats.prompt_tokens += len(r.prompt)
             self.stats.padded_tokens += max_prompt - len(r.prompt)
             self.stats.generated_tokens += r.max_new
+            # processed positions: the prompt, plus one decode lane-step per
+            # generated token after the first (the first comes from prefill)
+            self.stats.useful_steps += len(r.prompt) + r.max_new - 1
         self.stats.waves += 1
         self.stats.requests += B
+        self.stats.slot_steps += B * (max_prompt + max_new - 1)
         return comps
 
     def drain(self) -> list[Completion]:

@@ -6,8 +6,6 @@ the host loop used by the examples.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -38,7 +36,10 @@ def prefill_step(params, cfg: ModelConfig, batch, cache_len: int,
 
 def decode_step(params, cfg: ModelConfig, batch, caches, pos,
                 act_pspec=None, legacy_decode=False):
-    """One token for every sequence in the batch. batch["tokens"]: (B, 1)."""
+    """One token for every sequence in the batch. batch["tokens"]: (B, 1).
+
+    ``pos`` is a scalar (aligned decode) or a (B,) per-slot position vector
+    (continuous batching — each row masks and RoPEs at its own position)."""
     logits, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
                                     caches=caches, pos=pos,
                                     act_pspec=act_pspec,
@@ -73,13 +74,18 @@ def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
     batch = {"tokens": prompt}
     if extras:
         batch.update(extras)
-    pf = jax.jit(functools.partial(prefill_step, cfg=cfg,
-                                   cache_len=cache_len),
-                 static_argnames=())
-    logits, caches = prefill_step(params, cfg, batch, cache_len)
+    # prefill and decode+sample each run as ONE jitted computation: the
+    # sampler fuses with the model step instead of round-tripping logits
+    pf = jax.jit(lambda p, b: prefill_step(p, cfg, b, cache_len))
+
+    @jax.jit
+    def dec(p, b, c, pos, key):
+        logits, c = decode_step(p, cfg, b, c, pos)
+        return sample(logits, cfg.vocab_size, key, temperature), c
+
+    logits, caches = pf(params, batch)
     key = jax.random.PRNGKey(seed)
     toks = [prompt]
-    dec = jax.jit(lambda p, b, c, pos: decode_step(p, cfg, b, c, pos))
     cur = sample(logits, cfg.vocab_size, key, temperature)[:, None]
     for i in range(max_new):
         toks.append(cur)
@@ -88,7 +94,7 @@ def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
         b = {"tokens": cur}
         if extras:
             b.update(extras)
-        logits, caches = dec(params, b, caches, S + i)
         key, sub = jax.random.split(key)
-        cur = sample(logits, cfg.vocab_size, sub, temperature)[:, None]
+        nxt, caches = dec(params, b, caches, S + i, sub)
+        cur = nxt[:, None]
     return jnp.concatenate(toks, axis=1)

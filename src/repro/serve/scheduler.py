@@ -1,0 +1,330 @@
+"""Continuous-batching scheduler over the slot-level KV pool.
+
+Unlike the static ``WaveBatcher`` (requests grouped into lockstep waves, short
+prompts padded to the wave maximum), this scheduler keeps a fixed-capacity
+``SlotPool`` decoding every step and *prefills new requests into free slots
+while in-flight slots keep decoding*: the decode batch is continuously
+refilled, each slot carries its own position, and requests terminate
+independently (per-request ``max_new`` / EOS).
+
+This is the paper's write-once/reuse-many schedule at request granularity
+(DESIGN.md §Serving): the R basic weight banks stay resident while a
+continuously topped-up decode population streams through them, so the MRR
+programming cost is amortized over ``active_slots x steps`` token passes
+instead of one aligned wave.  ``ReuseAwareAdmission`` makes that explicit —
+it uses the calibrated cost model (``core.costmodel``) to derive the minimum
+decode population at which write energy is acceptably amortized, and admits
+aggressively below it.
+
+Both schedulers implement the ``Scheduler`` protocol: ``submit`` requests,
+``drain`` completions.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel
+from repro.core.prm import ReusePlan
+from repro.models import transformer as tfm
+from repro.serve import engine
+from repro.serve.batcher import Completion, Request
+from repro.serve.slots import SlotPool, SlotState
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """What ``launch/serve.py`` and the benchmarks program against."""
+
+    def submit(self, req: Request) -> None: ...
+
+    def drain(self) -> list[Completion]: ...
+
+
+# =========================================================================
+# reuse-aware admission
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class ReuseAwareAdmission:
+    """Cost-model-driven admission policy (R&B amortization, request level).
+
+    On the photonic target the R basic banks are reprogrammed once per
+    calibration interval (``refresh_steps`` decode steps — thermal drift /
+    aging recalibration, §4.2.3), while every decode step streams the whole
+    active population through the resident banks.  With M weight matrices of
+    ~(d, d) per basic block and stack depth D, the energy efficiency at
+    active population A is
+
+        eff(A) = A * refresh_steps * D * e_comp
+                 / (A * refresh_steps * D * e_comp + R * M * e_write)
+
+    ``min_population`` is the smallest A with eff >= ``target_efficiency``.
+    Below it the policy admits everything that fits (batched admissions
+    rebuild amortization fastest); at or above it, at most
+    ``max_admit_per_step`` per step so prefill work never starves the
+    in-flight decodes.
+    """
+
+    min_population: int
+    max_admit_per_step: int = 1
+
+    @staticmethod
+    def build(cfg: ModelConfig, *, tile: int = 256,
+              target_efficiency: float = 0.9, refresh_steps: int = 8,
+              mats_per_block: int = 6, max_admit_per_step: int = 1
+              ) -> "ReuseAwareAdmission":
+        R, depth = 0, 0
+        for spec in tfm.build_segments(cfg):
+            if spec.stream == "encoder":
+                continue
+            plan = ReusePlan.build(spec.num_groups, spec.reuse)
+            R += plan.num_physical
+            depth += spec.depth
+        d = cfg.d_model
+        _, e_write = costmodel.CALIBRATED.write_cost(d, d, tile)
+        _, e_comp = costmodel.CALIBRATED.compute_cost(d, d, tile)
+        ratio = target_efficiency / max(1.0 - target_efficiency, 1e-9)
+        min_pop = math.ceil(ratio * R * mats_per_block * e_write
+                            / (depth * e_comp * refresh_steps))
+        return ReuseAwareAdmission(min_population=max(1, min_pop),
+                                   max_admit_per_step=max_admit_per_step)
+
+    def admit_count(self, *, queued: int, free: int, active: int) -> int:
+        """How many queued requests to prefill this step."""
+        if queued == 0 or free == 0:
+            return 0
+        if active < self.min_population:
+            return min(queued, free)
+        return min(queued, free, self.max_admit_per_step)
+
+
+# =========================================================================
+# stats
+# =========================================================================
+@dataclasses.dataclass
+class ContinuousStats:
+    requests: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    prompt_tokens: int = 0
+    padded_prefill_tokens: int = 0   # bucket padding beyond the prompt
+    generated_tokens: int = 0
+    slot_steps: int = 0              # executed slot-token-steps (incl. idle)
+    idle_slot_steps: int = 0         # decode lanes run with no active request
+    useful_steps: int = 0            # processed positions that served a
+                                     # request: prompt + post-prefill decodes
+
+    @property
+    def overhead(self) -> float:
+        """Wasted fraction of executed slot-token-steps (pad + idle lanes)."""
+        return (1.0 - self.useful_steps / self.slot_steps
+                if self.slot_steps else 0.0)
+
+    @property
+    def idle_fraction(self) -> float:
+        if not self.decode_steps:
+            return 0.0
+        return self.idle_slot_steps / (self.decode_steps * self._capacity)
+
+    _capacity: int = 1
+
+
+# =========================================================================
+# continuous scheduler
+# =========================================================================
+class ContinuousScheduler:
+    """Slot-level continuous batching over a shared [R, T, B, L, ...] pool.
+
+    Greedy outputs are token-identical to ``engine.generate`` run per
+    request: prompts are left-aligned at position 0 of their slot, prefill
+    pads only to a compile bucket on the *right* (causally invisible), and
+    decode masks every row at its own position.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, capacity: int = 8,
+                 max_len: int = 256, pad_id: int = 0,
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_bucket: int = 16,
+                 admission: Optional[ReuseAwareAdmission] = None,
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 on_complete: Optional[Callable[[Completion], None]] = None):
+        self.params = engine.cast_params(params, cfg)
+        self.cfg = cfg
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self.prefill_bucket = max(1, prefill_bucket)
+        self.admission = admission or ReuseAwareAdmission.build(cfg)
+        self.on_token = on_token
+        self.on_complete = on_complete
+        self.pool = SlotPool(cfg, capacity, max_len)
+        # Right-padding a prefill is causally invisible to attention (masked
+        # by the slot position) but NOT to recurrent state: SSM ``h`` and the
+        # conv tail integrate every input token.  Models with SSM layers
+        # therefore prefill at the exact prompt length (one jit per length).
+        self._exact_prefill = any(
+            "ssm" in spec.mixer_kinds for spec in tfm.build_segments(cfg)
+            if spec.stream != "encoder")
+        self.queue: collections.deque[Request] = collections.deque()
+        self.stats = ContinuousStats(_capacity=capacity)
+        self.key = jax.random.PRNGKey(seed)
+        # current (unprocessed) token per slot, fed to the next decode step
+        self._cur = np.full((capacity, 1), pad_id, np.int32)
+        self._pf_cache: dict = {}
+        self._dec = self._build_decode()
+
+    # ------------------------------------------------------------ jit cells
+    def _build_decode(self):
+        cfg, temp = self.cfg, self.temperature
+
+        @jax.jit
+        def dec(p, toks, caches, pos, key):
+            logits, caches = engine.decode_step(p, cfg, {"tokens": toks},
+                                                caches, pos)
+            return engine.sample(logits, cfg.vocab_size, key, temp), caches
+
+        return dec
+
+    def _prefill_fn(self, bucket: int):
+        """One jitted prefill per compile bucket (attention-only models
+        round the prompt length up — right-padding is masked out, so
+        results stay exact; SSM models pass exact lengths, see _bucket)."""
+        fn = self._pf_cache.get(bucket)
+        if fn is None:
+            cfg = self.cfg
+            dtype = jnp.dtype(cfg.compute_dtype)
+
+            def pf(p, batch, last):
+                caches = tfm.init_caches(cfg, batch["tokens"].shape[0],
+                                         bucket, dtype=dtype)
+                logits, caches, _ = tfm.forward(p, cfg, batch,
+                                                mode="prefill", caches=caches)
+                return logits[jnp.arange(logits.shape[0]), last], caches
+
+            fn = self._pf_cache[bucket] = jax.jit(pf)
+        return fn
+
+    # ------------------------------------------------------------ interface
+    def submit(self, req: Request) -> None:
+        plen = len(req.prompt)
+        if plen + req.max_new > self.pool.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + max_new {req.max_new} "
+                f"exceeds slot budget {self.pool.max_len}")
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        self.queue.append(req)
+
+    def drain(self) -> list[Completion]:
+        """Run until queue and slots are empty; completions in finish order."""
+        done: list[Completion] = []
+        while self.queue or self.pool.num_active:
+            done.extend(self.step())
+        return done
+
+    # ------------------------------------------------------------ one step
+    def step(self) -> list[Completion]:
+        """Admit (policy-bounded) new requests, then decode one token for
+        every in-flight slot.  Returns requests completed this step."""
+        done: list[Completion] = []
+        n = self.admission.admit_count(queued=len(self.queue),
+                                       free=self.pool.num_free,
+                                       active=self.pool.num_active)
+        for _ in range(n):
+            comp = self._admit_one(self.queue.popleft())
+            if comp is not None:          # max_new == 1: done at prefill
+                done.append(comp)
+        if self.pool.num_active:
+            done.extend(self._decode_once())
+        return done
+
+    # ------------------------------------------------------------ internals
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _bucket(self, plen: int) -> int:
+        if self._exact_prefill:
+            return plen
+        b = self.prefill_bucket
+        return min(-(-plen // b) * b, self.pool.max_len)
+
+    def _admit_one(self, req: Request) -> Optional[Completion]:
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        state = SlotState(rid=req.rid, prompt_len=plen, max_new=req.max_new,
+                          eos_id=req.eos_id,
+                          prompt=np.asarray(req.prompt, np.int32),
+                          padded_to=bucket)
+        slot = self.pool.allocate(state)
+        toks = np.full((1, bucket), self.pad_id, np.int32)
+        toks[0, :plen] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if req.extras:
+            batch.update(req.extras)
+        pf = self._prefill_fn(bucket)
+        logits, caches = pf(self.params, batch,
+                            jnp.asarray([plen - 1], jnp.int32))
+        self.pool.write_prefill(slot, caches, plen)
+        tok = int(np.asarray(engine.sample(logits, self.cfg.vocab_size,
+                                           self._next_key(),
+                                           self.temperature))[0])
+        self._cur[slot, 0] = tok
+        self.stats.requests += 1
+        self.stats.prefills += 1
+        self.stats.prompt_tokens += plen
+        self.stats.padded_prefill_tokens += bucket - plen
+        self.stats.slot_steps += bucket
+        self.stats.useful_steps += plen
+        return self._commit_token(slot, tok)
+
+    def _commit_token(self, slot: int, tok: int) -> Optional[Completion]:
+        """Record one generated token; complete/free the slot if done."""
+        state = self.pool.slots[slot]
+        state.tokens.append(tok)
+        state.generated += 1
+        self.stats.generated_tokens += 1
+        if self.on_token is not None:
+            self.on_token(state.rid, tok)
+        hit_eos = state.eos_id is not None and tok == state.eos_id
+        if state.generated >= state.max_new or hit_eos:
+            self.pool.free(slot)
+            self._cur[slot, 0] = self.pad_id
+            comp = Completion(
+                rid=state.rid,
+                tokens=np.concatenate([state.prompt,
+                                       np.asarray(state.tokens, np.int32)]),
+                prompt_len=state.prompt_len, padded_to=state.padded_to,
+                finish_reason="eos" if hit_eos else "length")
+            if self.on_complete is not None:
+                self.on_complete(comp)
+            return comp
+        return None
+
+    def _decode_once(self) -> list[Completion]:
+        active = self.pool.active_slots()
+        nxt, self.pool.caches = self._dec(
+            self.params, jnp.asarray(self._cur), self.pool.caches,
+            self.pool.position_vector(), self._next_key())
+        nxt = np.asarray(nxt)
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += self.pool.capacity
+        self.stats.idle_slot_steps += self.pool.capacity - len(active)
+        done = []
+        for slot in active:
+            # the step wrote this slot's pending token at its position
+            self.pool.advance(slot)
+            self.stats.useful_steps += 1
+            comp = self._commit_token(slot, int(nxt[slot]))
+            if comp is None:
+                self._cur[slot, 0] = int(nxt[slot])
+            else:
+                done.append(comp)
+        return done

@@ -1,0 +1,145 @@
+"""Slot-level KV/SSM cache pool for continuous batching (DESIGN.md §Serving).
+
+A ``SlotPool`` owns ONE preallocated cache pytree shaped ``[R, T, B, L, ...]``
+(the PRM layout from ``models.transformer.init_caches``) where ``B`` is the
+fixed slot capacity and ``L`` the per-slot context budget.  Requests are
+*left-aligned*: a request's prompt K/V always starts at position 0 of its
+slot, and a per-slot position vector tracks each slot's fill independently —
+this is what the per-slot decode path (attention masks, RoPE, delta writes)
+consumes.  Freeing a slot is O(1) bookkeeping: stale cache contents beyond a
+slot's position are never visible because every decode read is masked by
+``positions``.
+
+The pool is deliberately model-agnostic: any cache leaf written by prefill
+with batch 1 and length <= L inserts via one ``dynamic_update_slice`` at
+``(0, 0, slot, 0, ...)`` — KV buffers, MLA latents, SSM states and conv
+tails, and cross-attention memory all share that shape contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side bookkeeping for one occupied slot."""
+    rid: int
+    prompt_len: int
+    max_new: int
+    eos_id: Optional[int] = None
+    generated: int = 0
+    tokens: list = dataclasses.field(default_factory=list)  # generated ids
+    prompt: Optional[np.ndarray] = None
+    padded_to: int = 0             # prefill compile-bucket length
+
+
+class SlotPool:
+    """Fixed-capacity slot pool over one preallocated [R, T, B, L, ...] cache.
+
+    ``allocate`` hands out the lowest free slot index (left-aligned packing:
+    the active population stays clustered at low indices, which keeps the
+    admission-order/slot-order mapping predictable and makes idle-slot
+    accounting trivial), ``write_prefill`` inserts a freshly prefilled
+    request at position 0 of its slot, and ``free`` recycles the slot.
+    """
+
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int,
+                 dtype=None):
+        if capacity < 1 or max_len < 2:
+            raise ValueError("need capacity >= 1 and max_len >= 2")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_len = max_len
+        dtype = dtype or jnp.dtype(cfg.compute_dtype)
+        self.caches = tfm.init_caches(cfg, capacity, max_len, dtype=dtype)
+        # next write position per slot; clamped to max_len - 1 so a full
+        # slot's delta write lands in-bounds (and is masked on read)
+        self.positions = np.zeros(capacity, np.int32)
+        self.slots: list[Optional[SlotState]] = [None] * capacity
+        self._free: list[int] = list(range(capacity))
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_active(self) -> int:
+        return self.capacity - len(self._free)
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def allocate(self, state: SlotState) -> int:
+        """Claim the lowest-index free slot for ``state``."""
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        self._free.sort()
+        slot = self._free.pop(0)
+        self.slots[slot] = state
+        return slot
+
+    def free(self, slot: int) -> SlotState:
+        """Release ``slot``; its cache contents become dead (masked) data."""
+        state = self.slots[slot]
+        if state is None:
+            raise ValueError(f"slot {slot} is not active")
+        self.slots[slot] = None
+        self.positions[slot] = 0
+        self._free.append(slot)
+        return state
+
+    def reset(self) -> None:
+        """Drop all slots (cache memory is kept allocated)."""
+        self.positions[:] = 0
+        self.slots = [None] * self.capacity
+        self._free = list(range(self.capacity))
+
+    # ------------------------------------------------------------- cache IO
+    def write_prefill(self, slot: int, prefill_caches, prompt_len: int
+                      ) -> None:
+        """Insert a batch-1 prefilled cache pytree at position 0 of ``slot``.
+
+        ``prefill_caches`` leaves are [R, T, 1, Lp, ...] (or full-state
+        leaves like SSM ``h`` with no length axis); every leaf is written
+        with one dynamic_update_slice at (0, 0, slot, 0, ...).
+        """
+        if self.slots[slot] is None:
+            raise ValueError(f"slot {slot} is not active")
+        if prompt_len > self.max_len:
+            raise ValueError(
+                f"prompt_len {prompt_len} exceeds slot budget {self.max_len}")
+
+        def _insert(pool_leaf, pre_leaf):
+            if pre_leaf.ndim != pool_leaf.ndim:
+                raise ValueError(
+                    f"prefill leaf rank {pre_leaf.ndim} != pool rank "
+                    f"{pool_leaf.ndim}")
+            idx = (0, 0, slot) + (0,) * (pool_leaf.ndim - 3)
+            return jax.lax.dynamic_update_slice(
+                pool_leaf, pre_leaf.astype(pool_leaf.dtype), idx)
+
+        self.caches = jax.tree.map(_insert, self.caches, prefill_caches)
+        self.positions[slot] = prompt_len
+
+    def advance(self, slot: int) -> None:
+        """One token decoded for ``slot``: bump its position (clamped)."""
+        self.positions[slot] = min(self.positions[slot] + 1,
+                                   self.max_len - 1)
+
+    def position_vector(self) -> jnp.ndarray:
+        """(B,) int32 per-slot next-write positions for the decode step."""
+        return jnp.asarray(self.positions)
+
+    def remaining(self, slot: int) -> int:
+        """Context budget left in ``slot`` (tokens)."""
+        return self.max_len - int(self.positions[slot])

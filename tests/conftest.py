@@ -1,12 +1,19 @@
 import jax
 import pytest
-from hypothesis import HealthCheck, settings
 
-# JIT compilation makes first examples slow; disable wall-clock deadlines.
-settings.register_profile(
-    "jax", deadline=None, max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.load_profile("jax")
+# ``hypothesis`` is an optional test dependency: property-based tests skip
+# cleanly when it is absent (CI installs it; minimal environments need not).
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    settings = None
+
+if settings is not None:
+    # JIT compilation makes first examples slow; disable wall-clock deadlines.
+    settings.register_profile(
+        "jax", deadline=None, max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("jax")
 
 # Tests run on the single CPU device (the 512-device XLA flag is set ONLY by
 # launch/dryrun.py).  Keep x64 off to match TPU-ish numerics.

@@ -1,8 +1,8 @@
 """Tests: aging/endurance model (paper §4.2.3) and the wave batcher."""
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+
+from _optional_hypothesis import given, st
 
 import jax
 

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _optional_hypothesis import given, settings, st
 
 from repro.core import costmodel, obu, photonic
 from repro.core.prm import ReuseConfig, ReusePlan, no_reuse
