@@ -1,0 +1,156 @@
+"""xla-vs-photonic execution-backend comparison on the paper models.
+
+``python -m benchmarks.backend_bench [--arch deepseek-7b] [--quick]``
+
+For each arch (smoke-scale so interpret-mode Pallas stays CPU-tractable) the
+same params/batch run under ``execution="xla"`` and ``execution="photonic"``
+(core/backend.py); rows report per-backend step time and the photonic-vs-xla
+parity error (rel-L2, which must sit within W8A8 quantization tolerance —
+the acceptance criterion of ISSUE 2).  A kernel-level microbench compares
+the reuse-resident kernel (weight programmed once, T streams) against T
+independent per-call kernels.
+
+CSV convention: ``name,us_per_call,derived``.  Details land in
+results/backend_bench.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _rel_l2(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+def bench_model(arch: str, B: int, S: int, reps: int, details: dict):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import smoke_variant
+    from repro.models import transformer as tfm
+    from repro.serve import engine
+
+    cfg = smoke_variant(arch)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    rows = []
+    logits = {}
+    fwd_us = {}
+    for execution in ("xla", "photonic"):
+        c = dataclasses.replace(cfg, execution=execution)
+        fwd = jax.jit(lambda p, b, c=c: tfm.forward(p, c, b,
+                                                    mode="train")[0])
+        out = fwd(params, batch)
+        out.block_until_ready()              # compile outside the timing
+        t0 = time.time()
+        for _ in range(reps):
+            out = fwd(params, batch)
+        out.block_until_ready()
+        fwd_us[execution] = (time.time() - t0) / reps * 1e6
+        logits[execution] = out
+        rows.append((f"backend_{arch}_{execution}_fwd", fwd_us[execution]))
+    err = _rel_l2(logits["photonic"], logits["xla"])
+    # one decode step per backend (the serving hot path)
+    dec_us = {}
+    for execution in ("xla", "photonic"):
+        lx, caches = engine.prefill_step(params, cfg,
+                                         {"tokens": batch["tokens"]}, S + 1,
+                                         execution=execution)
+        dec = jax.jit(lambda p, b, ca, pos, e=execution:
+                      engine.decode_step(p, cfg, b, ca, pos, execution=e))
+        b1 = {"tokens": batch["tokens"][:, :1]}
+        out, caches = dec(params, b1, caches, S)
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(reps):
+            out, caches = dec(params, b1, caches, S)
+        out.block_until_ready()
+        dec_us[execution] = (time.time() - t0) / reps * 1e6
+        rows.append((f"backend_{arch}_{execution}_decode",
+                     dec_us[execution]))
+    details[arch] = {"B": B, "S": S, "fwd_us": fwd_us, "decode_us": dec_us,
+                     "parity_rel_l2": err}
+    return rows, err
+
+
+def bench_resident_kernel(reps: int, details: dict):
+    """Reuse-resident kernel vs T per-call kernels (same math, different
+    schedule: one weight programming vs T)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    T, M, K, N = 4, 64, 128, 128
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+
+    res = jax.jit(lambda x, w: ops.reuse_resident_matmul(x, w, bm=32, bn=64))
+    per = jax.jit(lambda x, w: jnp.stack(
+        [ops.photonic_matmul_kernel(x[t], w, bm=32, bk=64, bn=64)
+         for t in range(T)]))
+    a = res(x, w)
+    b = per(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+    t0 = time.time()
+    for _ in range(reps):
+        a = res(x, w)
+    a.block_until_ready()
+    us_res = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        b = per(x, w)
+    b.block_until_ready()
+    us_per = (time.time() - t0) / reps * 1e6
+    details["resident_kernel"] = {"T": T, "M": M, "K": K, "N": N,
+                                  "resident_us": us_res,
+                                  "per_call_us": us_per,
+                                  "weight_programs": {"resident": 1,
+                                                      "per_call": T}}
+    return us_res, us_per
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="paper arch id(s); default deepseek-7b + mamba2")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    archs = args.arch or (["deepseek-7b"] if args.quick
+                          else ["deepseek-7b", "mamba2-780m"])
+    reps = 1 if args.quick else args.reps
+
+    details: dict = {}
+    print("name,us_per_call,derived")
+    worst = 0.0
+    for arch in archs:
+        rows, err = bench_model(arch, args.batch, args.seq, reps, details)
+        worst = max(worst, err)
+        for name, us in rows:
+            print(f"{name},{us:.1f},parity rel-L2 {err:.4f}", flush=True)
+    us_res, us_per = bench_resident_kernel(reps, details)
+    print(f"resident_kernel_T4,{us_res:.1f},"
+          f"vs {us_per:.1f}us per-call (1 vs 4 weight programs)", flush=True)
+    os.makedirs("results", exist_ok=True)
+    with open("results/backend_bench.json", "w") as f:
+        json.dump(details, f, indent=1)
+    print("\n# details written to results/backend_bench.json")
+    # acceptance: photonic within W8A8 tolerance of xla
+    ok = worst < 0.25
+    print(f"# parity worst rel-L2 {worst:.4f} -> {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -253,6 +253,22 @@ def bench_fig1():
         f"R&B total saving {save:.0%}")
 
 
+def bench_backend(quick=False):
+    """xla-vs-photonic execution backend on a paper model (ISSUE 2):
+    per-backend step time + W8A8 parity, and the reuse-resident kernel
+    vs per-call weight programming."""
+    from benchmarks import backend_bench
+    det = {}
+    reps = 1 if quick else 3
+    rows_, err = backend_bench.bench_model("deepseek-7b", 2, 16, reps, det)
+    for name, us in rows_:
+        row(name, us, f"photonic-vs-xla rel-L2 {err:.4f}")
+    us_res, us_per = backend_bench.bench_resident_kernel(reps, det)
+    row("resident_kernel_T4", us_res,
+        f"vs {us_per:.1f}us per-call (1 vs 4 weight programs)")
+    DETAILS["backend"] = det
+
+
 def bench_roofline():
     """Roofline terms per (arch x shape) from the dry-run artifacts."""
     path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
@@ -291,6 +307,7 @@ def main() -> None:
         "table4": lambda: bench_table4(args.quick),
         "table5": lambda: bench_table5(args.quick),
         "fig1": bench_fig1,
+        "backend": lambda: bench_backend(args.quick),
         "roofline": bench_roofline,
     }
     print("name,us_per_call,derived")

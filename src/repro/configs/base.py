@@ -90,8 +90,13 @@ class ModelConfig:
     sub_quadratic: bool = False    # can run long_500k (ssm / hybrid)
     padded_vocab: int = 0          # vocab rounded up for clean TP sharding
                                    # (Megatron-style; loss/sampling mask the pad)
+    execution: str = "xla"         # matmul substrate: "xla" dot_generals or
+                                   # "photonic" Pallas W8A8 kernels
+                                   # (core/backend.py; inference-only)
 
     def __post_init__(self):
+        if self.execution not in ("xla", "photonic"):
+            raise ValueError(f"unknown execution backend {self.execution!r}")
         if self.head_dim is None and self.num_heads > 0:
             object.__setattr__(self, "head_dim",
                                self.d_model // self.num_heads)

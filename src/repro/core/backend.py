@@ -1,0 +1,113 @@
+"""Execution backends — the seam between the model stack and the compute
+substrate (DESIGN.md §Execution backends).
+
+Every weight matmul in ``models/*`` goes through ``Backend.dot`` (and the
+PRM-blended MoE banks through ``Backend.reuse_dot``); the OBU activation
+shuffle in ``core/sharing.py`` goes through ``Backend.shuffle``.  Two
+backends implement the seam:
+
+  * ``"xla"``      — ``obu.blend_dot`` dot_generals (fp accumulate; the
+    transpose is a contraction-dim swap).  The default; bit-identical to the
+    pre-backend code path.
+  * ``"photonic"`` — the Pallas W8A8 kernels (`kernels/ops.py`): quantize ->
+    offset-decomposed MVM (paper eq. 6) per matmul (weights re-quantize
+    inside each jitted step — see DESIGN.md §Execution backends "Known
+    cost" for the planned prepared-weights path); the OBU transpose is the
+    pre-swapped kernel variant (``photonic_mvm_t``, in-register tile swap);
+    *blocked* OBU shuffles fold into the blend kernel's index-map epilogue;
+    PRM-blended expert banks stream through the weight-stationary
+    reuse-resident kernel.  On CPU the kernels run with ``interpret=True``
+    (see `kernels/ops.py`); numerics differ from "xla" by exactly the W8A8
+    quantization error, which the backend-parity tests bound.
+
+The photonic backend is *inference-only*: quantization rounding has no
+useful gradient and the Pallas calls define no VJP.  Training cells keep
+``execution="xla"`` (enforced by ``launch/dryrun.py``).
+
+Selection: ``ModelConfig.execution`` ("xla" | "photonic"), overridable
+per-call via the ``execution=`` kwarg on ``transformer.forward`` and the
+serve-engine steps (A/B without rebuilding configs).  ``resolve`` accepts a
+``Backend``, a name, a config, or None (-> XLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import obu
+from repro.kernels import ops
+
+EXECUTIONS = ("xla", "photonic")
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Static (hashable, trace-time) description of the matmul substrate."""
+
+    execution: str = "xla"
+    bm: int = 128                     # Pallas tile sizes (photonic only)
+    bk: int = 128
+    bn: int = 128
+
+    def __post_init__(self):
+        if self.execution not in EXECUTIONS:
+            raise ValueError(f"unknown execution backend "
+                             f"{self.execution!r}; have {EXECUTIONS}")
+
+    @property
+    def is_photonic(self) -> bool:
+        return self.execution == "photonic"
+
+    # ------------------------------------------------------------- matmuls
+    def dot(self, x, w, *, transpose: bool = False):
+        """``x @ w`` (w: (k, n)) or ``x @ w.T`` (w: (n, k)) — the weight
+        matmul primitive every layer routes through."""
+        if not self.is_photonic:
+            return obu.blend_dot(x, w, transpose=transpose)
+        if transpose:
+            if w.shape[-1] != x.shape[-1]:
+                raise ValueError(f"transpose blend needs square-compatible "
+                                 f"dims, got x{x.shape} w{w.shape}")
+            return ops.photonic_matmul_kernel_t(x, w, bm=self.bm, bk=self.bk,
+                                                bn=self.bn)
+        return ops.photonic_matmul_kernel(x, w, bm=self.bm, bk=self.bk,
+                                          bn=self.bn)
+
+    def reuse_dot(self, x_stack, w):
+        """T independent activation streams through ONE weight: x_stack
+        (T, ..., k) @ w (k, n).  Photonic: the weight is programmed once and
+        stays VMEM-resident while the T streams pass (the write-once /
+        reuse-T-times schedule as a kernel)."""
+        if not self.is_photonic:
+            return obu.blend_dot(x_stack, w, transpose=False)
+        return ops.reuse_resident_matmul(x_stack, w, bm=self.bm, bn=self.bn)
+
+    # -------------------------------------------------------------- shuffle
+    def shuffle(self, h, perm, block_perm=None, block: int = 0):
+        """OBU electronic shuffle of the channel axis.
+
+        Photonic + blocked permutation: realized by the blend kernel's
+        index-map epilogue (`kernels/blend.py` — the shuffle IS the grid
+        index remapping, zero extra HBM passes).  Otherwise (group-shuffle
+        flavor, or xla backend) the static constant-index gather."""
+        if self.is_photonic and block_perm is not None and block > 0:
+            bias = jnp.zeros((h.shape[-1],), h.dtype)
+            return ops.blend_shuffle(h, bias, block_perm, block=block,
+                                     activation="none")
+        return obu.apply_channel_permutation(h, perm)
+
+
+XLA = Backend("xla")
+PHOTONIC = Backend("photonic")
+
+
+def resolve(spec=None) -> Backend:
+    """Backend from a Backend | name | config-with-.execution | None."""
+    if spec is None:
+        return XLA
+    if isinstance(spec, Backend):
+        return spec
+    if isinstance(spec, str):
+        return PHOTONIC if spec == "photonic" else Backend(spec)
+    return resolve(getattr(spec, "execution", None))

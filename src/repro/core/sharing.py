@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.core import obu
 from repro.core.prm import ReuseConfig, ReusePlan, no_reuse
 
@@ -46,6 +47,11 @@ class SharedStack:
     inv_perm_table: np.ndarray      # (T, channels) int32
     transpose_flags: np.ndarray     # (T,) bool
     shuffle_active: tuple           # (T,) of python bool — skip identity gathers
+    block_perm_table: tuple = ()    # (T,) of tuple block order | None — set
+                                    # when perm[t] is a *blocked* shuffle, so
+                                    # the photonic backend can fold it into
+                                    # the blend kernel's index-map epilogue
+    shuffle_block: int = 0          # block size of the blocked entries
 
     @staticmethod
     def build(depth: int, channels: int,
@@ -59,8 +65,21 @@ class SharedStack:
         tf = obu.transpose_flags(c.reuse_times, c.transforms)
         active = tuple(bool((perm[t] != np.arange(channels)).any())
                        for t in range(c.reuse_times))
+        block = (c.shuffle_block if c.shuffle_block > 0
+                 and channels % c.shuffle_block == 0 else 0)
+        bpt = []
+        for t in range(c.reuse_times):
+            bp = None
+            if block and active[t]:
+                p2 = perm[t].reshape(-1, block)
+                order = p2[:, 0] // block
+                if (p2 == order[:, None] * block
+                        + np.arange(block)[None, :]).all():
+                    bp = tuple(int(v) for v in order)
+            bpt.append(bp)
         return SharedStack(plan=plan, perm_table=perm, inv_perm_table=inv,
-                           transpose_flags=tf, shuffle_active=active)
+                           transpose_flags=tf, shuffle_active=active,
+                           block_perm_table=tuple(bpt), shuffle_block=block)
 
     @property
     def num_physical(self) -> int:
@@ -122,7 +141,7 @@ def _delta_update(cache_leaf, delta, r, t, pos):
 def run_stack(block_fn: BlockFn, params: Any, x: jax.Array,
               shared: SharedStack, cache: Any = None, aux0=0.0,
               unroll_scan: int = 1, remat: bool = False,
-              decode_pos=None):
+              decode_pos=None, backend=None):
     """Run a PRM-shared stack.
 
     Args:
@@ -137,6 +156,9 @@ def run_stack(block_fn: BlockFn, params: Any, x: jax.Array,
       remat:   checkpoint each physical block — only the R block inputs are
         saved; the T reuses are recomputed in backward against the already-
         resident shared weights (the natural PRM remat boundary).
+      backend: core.backend.Backend (or anything ``backend.resolve`` takes).
+        The photonic backend applies *blocked* OBU shuffles via the blend
+        kernel's index-map epilogue instead of a gather.
       decode_pos: when set (decode mode), the cache travels as the scan
         CARRY — XLA aliases loop carries in place — and block_fn cache
         returns are treated as deltas written via dynamic_update_slice
@@ -150,11 +172,15 @@ def run_stack(block_fn: BlockFn, params: Any, x: jax.Array,
     T = shared.reuse_times
     have_cache = cache is not None
     aux0 = jnp.asarray(aux0, dtype=jnp.float32)
+    backend = backend_lib.resolve(backend)
+    bpt = shared.block_perm_table
 
     def one_reuse(t):
         def f(h, aux, p_r, c_t):
             if shared.shuffle_active[t]:
-                h = obu.apply_channel_permutation(h, shared.perm_table[t])
+                h = backend.shuffle(h, shared.perm_table[t],
+                                    block_perm=bpt[t] if bpt else None,
+                                    block=shared.shuffle_block)
             h, c_t, aux = block_fn(p_r, h, c_t, aux,
                                    transpose=bool(shared.transpose_flags[t]),
                                    reuse_index=t)

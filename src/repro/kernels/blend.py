@@ -44,8 +44,13 @@ def blend_shuffle(x, bias, block_perm, *, block=128, bm=128,
     perm = np.asarray(block_perm, dtype=np.int32)
     assert sorted(perm.tolist()) == list(range(nblk)), \
         "block_perm must be a permutation"
-    assert M % bm == 0, f"rows {M} must divide bm {bm}"
-    grid = (M // bm, nblk)
+    # ragged row counts (serving batches) are zero-padded to the row block,
+    # exactly like photonic_mvm._pad_to, and sliced back after the kernel
+    pad_m = (-M) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    Mp = M + pad_m
+    grid = (Mp // bm, nblk)
     gridspec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -60,7 +65,7 @@ def blend_shuffle(x, bias, block_perm, *, block=128, bm=128,
     out = pl.pallas_call(
         functools.partial(_kernel, activation=activation),
         grid_spec=gridspec,
-        out_shape=jax.ShapeDtypeStruct((M, C), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, C), x.dtype),
         interpret=interpret,
     )(jnp.asarray(perm), x, bias.reshape(1, C))
-    return out
+    return out[:M]

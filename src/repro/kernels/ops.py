@@ -34,6 +34,49 @@ def photonic_matmul_kernel(x, w, *, bm=128, bk=128, bn=128):
     return y.reshape(*lead, w.shape[1]).astype(x.dtype)
 
 
+def photonic_matmul_kernel_t(x, w, *, bm=128, bk=128, bn=128):
+    """Photonic W8A8 ``x @ w.T`` for w: (n, k) — the OBU optical-transpose
+    path as a pre-swapped kernel variant (no materialized transpose; the
+    weight tiles are swapped in-register inside the kernel).
+
+    Per-output-channel weight scales run along w's ROWS here (axis 0 is the
+    output channel of the transposed use)."""
+    qmax = 127.0
+    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)       # (n,)
+    w_norm = w / wmax[:, None]
+    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
+    xq, xscale = quantize_symmetric(x, 8)
+    lead = x.shape[:-1]
+    x2 = xq.reshape(-1, x.shape[-1])
+    y = _pm.photonic_mvm_t(x2, wq, xscale, wmax,
+                           bm=bm, bk=bk, bn=bn, qmax=qmax,
+                           interpret=_interpret())
+    return y.reshape(*lead, w.shape[0]).astype(x.dtype)
+
+
+def reuse_resident_matmul(x_stack, w, *, bm=128, bn=128):
+    """W8A8 matmul of T independent activation streams against ONE weight.
+
+    x_stack: (T, ..., k) — e.g. the token buffers of the T logical experts
+    blended from one basic expert.  The weight is quantized/programmed once
+    and stays VMEM-resident while all T streams pass through it
+    (kernels/photonic_mvm.photonic_mvm_resident); activations get per-step
+    A8 scales.  Returns (T, ..., n)."""
+    qmax = 127.0
+    w_norm, wmax = normalize_weights(w)
+    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
+    T = x_stack.shape[0]
+    lead = x_stack.shape[1:-1]
+    K = x_stack.shape[-1]
+    x2 = x_stack.reshape(T, -1, K)
+    xq, xscale = quantize_symmetric(x2, 8, axis=(1, 2))          # (T,1,1)
+    y = _pm.photonic_mvm_resident(xq, wq, xscale.reshape(T),
+                                  wmax.reshape(-1),
+                                  bm=min(bm, max(1, x2.shape[1])), bn=bn,
+                                  qmax=qmax, interpret=_interpret())
+    return y.reshape(T, *lead, w.shape[1]).astype(x_stack.dtype)
+
+
 def blend_shuffle(x, bias, block_perm, *, block=128, activation="relu"):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])

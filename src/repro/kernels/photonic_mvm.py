@@ -55,6 +55,42 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def _kernel_t(xq_ref, wq_ref, xs_ref, ws_ref, o_ref, acc_ref, xsum_ref, *,
+              nk: int, qmax: float):
+    """Pre-swapped variant: the weight arrives as (N, K) row-major and each
+    (bn, bk) tile is swapped in-register — the OBU optical transpose without
+    ever materializing ``w.T`` in HBM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xsum_ref[...] = jnp.zeros_like(xsum_ref)
+
+    xf = xq_ref[...].astype(jnp.float32)
+    w_prime = wq_ref[...].astype(jnp.float32).T / (2.0 * qmax) + 0.5
+    acc_ref[...] += jnp.dot(xf, w_prime,
+                            preferred_element_type=jnp.float32)
+    xsum_ref[...] += jnp.sum(xf, axis=1, keepdims=True)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        y = 2.0 * (acc_ref[...] - 0.5 * xsum_ref[...])
+        scale = xs_ref[0, 0] * ws_ref[...]
+        o_ref[...] = (y * scale).astype(o_ref.dtype)
+
+
+def _kernel_resident(xq_ref, wq_ref, xs_ref, ws_ref, o_ref, *, qmax: float):
+    """Reuse-resident step: the full (K, bn) weight tile is already in VMEM
+    (its index map ignores the streaming grid dims) — each step only streams
+    one activation row-block through it."""
+    xf = xq_ref[0].astype(jnp.float32)                   # (bm, K)
+    w_prime = wq_ref[...].astype(jnp.float32) / (2.0 * qmax) + 0.5
+    y = jnp.dot(xf, w_prime, preferred_element_type=jnp.float32)
+    y = 2.0 * (y - 0.5 * jnp.sum(xf, axis=1, keepdims=True))
+    o_ref[0] = (y * xs_ref[0, 0] * ws_ref[...]).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "qmax",
                                              "interpret", "out_dtype"))
 def photonic_mvm(xq, wq, x_scale, w_scale, *, bm=128, bk=128, bn=128,
@@ -87,3 +123,87 @@ def photonic_mvm(xq, wq, x_scale, w_scale, *, bm=128, bk=128, bn=128,
     )(xq_p, wq_p, jnp.reshape(x_scale, (1, 1)).astype(jnp.float32),
       ws_p.astype(jnp.float32))
     return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "qmax",
+                                             "interpret", "out_dtype"))
+def photonic_mvm_t(xq, wq, x_scale, w_scale, *, bm=128, bk=128, bn=128,
+                   qmax=127.0, interpret=True, out_dtype=jnp.float32):
+    """``xq @ wq.T`` for xq: (M, K) int8 and wq: (N, K) int8 (symmetric,
+    per-ROW scale — the output channel of the transposed use); x_scale:
+    scalar; w_scale: (N,).  Returns (M, N).
+
+    The transpose is realized as a *pre-swapped kernel variant*: the weight
+    BlockSpec walks (N, K) tiles and ``_kernel_t`` swaps each (bn, bk) tile
+    in-register — light entering the crossbar on the orthogonal port, never
+    a materialized ``w.T``."""
+    M, K = xq.shape
+    N, K2 = wq.shape
+    assert K == K2
+    xq_p = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+    wq_p = _pad_to(_pad_to(wq, bn, 0), bk, 1)
+    ws_p = _pad_to(w_scale.reshape(1, N), bn, 1)
+    Mp, Kp = xq_p.shape
+    Np = wq_p.shape[0]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel_t, nk=grid[2], qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        interpret=interpret,
+    )(xq_p, wq_p, jnp.reshape(x_scale, (1, 1)).astype(jnp.float32),
+      ws_p.astype(jnp.float32))
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "qmax",
+                                             "interpret", "out_dtype"))
+def photonic_mvm_resident(xq, wq, x_scale, w_scale, *, bm=128, bn=128,
+                          qmax=127.0, interpret=True, out_dtype=jnp.float32):
+    """Reuse-resident MVM: xq: (T, M, K) int8 — T reuse steps' activations
+    streamed through ONE programmed weight; wq: (K, N) int8; x_scale: (T,)
+    per-step A8 scales; w_scale: (N,).  Returns (T, M, N).
+
+    Weight-stationary schedule (the TPU analog of programming the MRR bank
+    once per calibration interval, paper §3.1): grid = (N/bn, T, M/bm) with
+    the weight index map *independent of (t, i)* — the full-depth (K, bn) W8
+    tile is fetched into VMEM once per output column block and every one of
+    the T*M/bm activation row blocks streams through it; no per-reuse
+    re-fetch.  The reduction depth K must fit one VMEM tile (no K grid dim),
+    which holds for every d_model/d_ff in the paper models at TPU VMEM
+    sizes; the offset row is recomputed per row-block (rank-1, free)."""
+    T, M, K = xq.shape
+    K2, N = wq.shape
+    assert K == K2
+    xq_p = _pad_to(xq, bm, 1)
+    wq_p = _pad_to(wq, bn, 1)
+    ws_p = _pad_to(w_scale.reshape(1, N), bn, 1)
+    Tq, Mp, Kp = xq_p.shape
+    Np = wq_p.shape[1]
+    grid = (Np // bn, T, Mp // bm)
+    out = pl.pallas_call(
+        functools.partial(_kernel_resident, qmax=qmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, Kp), lambda j, t, i: (t, i, 0)),
+            # weight index map ignores (t, i): programmed once, reused T*M/bm
+            # times — write-once / reuse-T-times in BlockSpec form.
+            pl.BlockSpec((Kp, bn), lambda j, t, i: (0, j)),
+            pl.BlockSpec((1, 1), lambda j, t, i: (t, 0)),
+            pl.BlockSpec((1, bn), lambda j, t, i: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda j, t, i: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, Mp, Np), out_dtype),
+        interpret=interpret,
+    )(xq_p, wq_p, jnp.reshape(x_scale, (T, 1)).astype(jnp.float32),
+      ws_p.astype(jnp.float32))
+    return out[:, :M, :N]

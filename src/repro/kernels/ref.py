@@ -14,6 +14,22 @@ def photonic_mvm_ref(xq, wq, x_scale, w_scale, qmax=127.0):
     return jnp.dot(xf, wf, preferred_element_type=jnp.float32)
 
 
+def photonic_mvm_t_ref(xq, wq, x_scale, w_scale, qmax=127.0):
+    """Oracle for the pre-swapped transpose kernel: xq (M,K) @ wq (N,K).T
+    with per-row weight scales."""
+    xf = xq.astype(jnp.float32) * x_scale
+    wf = wq.astype(jnp.float32) / qmax * w_scale.reshape(-1, 1)
+    return jnp.dot(xf, wf.T, preferred_element_type=jnp.float32)
+
+
+def photonic_mvm_resident_ref(xq, wq, x_scales, w_scale, qmax=127.0):
+    """Oracle for the reuse-resident kernel: per-step photonic_mvm_ref,
+    stacked — residency is a schedule property, not a numerics one."""
+    return jnp.stack([photonic_mvm_ref(xq[t], wq, x_scales[t], w_scale,
+                                       qmax=qmax)
+                      for t in range(xq.shape[0])])
+
+
 def blend_shuffle_ref(x, bias, block_perm, block, activation="relu"):
     M, C = x.shape
     perm = np.asarray(block_perm)

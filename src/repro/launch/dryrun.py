@@ -145,16 +145,24 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
 def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
                mesh_shape=None, compile_=True, extra_tag="",
                legacy_decode=False, act_mode="replicated",
-               fp32_accum=False):
+               fp32_accum=False, execution="xla"):
     from repro.core import obu
     obu.set_matmul_accum_fp32(fp32_accum)
     cfg = get_arch(arch, reuse=reuse)
+    if execution != "xla":
+        cfg = dataclasses.replace(cfg, execution=execution)
     shape = SHAPES[shape_name]
     ok, why = shape_supported(cfg, shape)
     result = {"arch": arch, "shape": shape_name, "reuse": reuse,
-              "multi_pod": multi_pod, "tag": extra_tag}
+              "multi_pod": multi_pod, "tag": extra_tag,
+              "execution": execution}
     if not ok:
         result["status"] = why
+        return result
+    if execution == "photonic" and shape.kind == "train":
+        # quantization rounding has no useful gradient and the Pallas calls
+        # define no VJP — the photonic backend is inference-only
+        result["status"] = "SKIP(photonic: inference-only backend)"
         return result
     if mesh_shape is not None:
         axes = (("pod", "data", "model") if len(mesh_shape) == 3
@@ -348,6 +356,10 @@ def main(argv=None):
     ap.add_argument("--fp32-accum", action="store_true",
                     help="fp32 matmul outputs => fp32 TP collectives "
                          "(baseline; §Perf A/B)")
+    ap.add_argument("--execution", default="xla",
+                    choices=["xla", "photonic"],
+                    help="matmul substrate: XLA dot_generals or the Pallas "
+                         "W8A8 photonic kernels (inference shapes only)")
     args = ap.parse_args(argv)
     mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
                   if args.mesh_shape else None)
@@ -361,7 +373,8 @@ def main(argv=None):
                            compile_=not args.no_compile, extra_tag=args.tag,
                            legacy_decode=args.decode_legacy,
                            act_mode=args.act_mode,
-                           fp32_accum=args.fp32_accum)
+                           fp32_accum=args.fp32_accum,
+                           execution=args.execution)
         except Exception as e:
             r = {"arch": arch, "shape": shape, "status": "FAIL",
                  "error": str(e)[:500]}

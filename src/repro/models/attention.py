@@ -19,17 +19,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig, ModelConfig
-from repro.core.obu import blend_dot
+from repro.core.backend import resolve as resolve_backend
 from repro.models.layers import _dense_init, apply_rope, rope_angles
 
 NEG_INF = -1e30
 
 
-def _maybe_t(x, w, transpose):
-    """OBU transpose where the matrix is square; identity path otherwise."""
+def _maybe_t(x, w, transpose, backend=None):
+    """OBU transpose where the matrix is square; identity path otherwise.
+    Routed through the execution backend (xla dot_general | photonic Pallas
+    kernel, the transpose as the pre-swapped kernel variant)."""
+    bk = resolve_backend(backend)
     if transpose and w.shape[0] == w.shape[1]:
-        return blend_dot(x, w, transpose=True)
-    return blend_dot(x, w, transpose=False)
+        return bk.dot(x, w, transpose=True)
+    return bk.dot(x, w, transpose=False)
 
 
 def _past_valid(pos, L):
@@ -121,22 +124,25 @@ def _attend_seq(q, k, v, causal: bool):
 
 
 def gqa_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
-                positions=None, cache=None):
+                positions=None, cache=None, backend=None):
     """Full-sequence path (train / prefill).  If ``cache`` (a pre-allocated
     capacity buffer) is given, the new K/V are written at offset 0 and the
     filled buffer is returned (prefill)."""
     B, S, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, S, H, hd)
-    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, S, KV, hd)
-    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, S, KV, hd)
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose,
+                 backend).reshape(B, S, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose,
+                 backend).reshape(B, S, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose,
+                 backend).reshape(B, S, KV, hd)
     if positions is None:
         positions = jnp.arange(S)
     cos, sin = rope_angles(positions, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     out = _attend_seq(q, k, v, causal)
-    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
     if cache is not None:
         ck = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
@@ -178,34 +184,41 @@ def _attend_decode(q, ck, cv, k_new, v_new, pos):
     return out.reshape(B, 1, H * hd_v).astype(q.dtype)
 
 
-def gqa_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
+def gqa_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False,
+               backend=None):
     """Single-token decode: x (B,1,d); cache k/v (B,L,KV,hd) read-only;
     pos scalar or (B,) per-slot.  Returns the one-token cache *delta* — the
     stack runner writes it in place."""
     B, S, d = x.shape
     assert S == 1
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, 1, H, hd)
-    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
-    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose,
+                 backend).reshape(B, 1, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose,
+                 backend).reshape(B, 1, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose,
+                 backend).reshape(B, 1, KV, hd)
     cos, sin = rope_angles(_decode_positions(pos), hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     out = _attend_decode(q, cache["k"], cache["v"], k, v, pos)
-    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
     return y, {"k": k.astype(cache["k"].dtype),
                "v": v.astype(cache["v"].dtype)}
 
 
 def gqa_decode_legacy(p, cfg: ModelConfig, x, cache, pos, *,
-                      transpose=False):
+                      transpose=False, backend=None):
     """Baseline decode (pre-§Perf): DUS the full cache buffer inside the
     block and attend against it — kept as an A/B knob for the perf log."""
     B, S, d = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, 1, H, hd)
-    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
-    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose).reshape(B, 1, KV, hd)
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose,
+                 backend).reshape(B, 1, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose,
+                 backend).reshape(B, 1, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose,
+                 backend).reshape(B, 1, KV, hd)
     posv = jnp.reshape(pos, (1,))
     cos, sin = rope_angles(posv, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
@@ -217,7 +230,7 @@ def gqa_decode_legacy(p, cfg: ModelConfig, x, cache, pos, *,
     L = ck.shape[1]
     mask = (jnp.arange(L) <= pos)[None, :]
     out = _gqa_attend(q, ck, cv, mask)
-    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
     return y, {"k": ck, "v": cv}
 
 
@@ -246,15 +259,16 @@ def init_mla(key, cfg: ModelConfig):
     return p, s
 
 
-def _mla_qkr(p, cfg, x, positions):
+def _mla_qkr(p, cfg, x, positions, backend=None):
     """Project q (+rope) and the compressed kv latents for new tokens."""
+    bk = resolve_backend(backend)
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.num_heads
-    q = blend_dot(x, p["wq"].astype(x.dtype), transpose=False)
+    q = bk.dot(x, p["wq"].astype(x.dtype), transpose=False)
     q = q.reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
     qn, qr = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
-    dkv = blend_dot(x, p["w_dkv"].astype(x.dtype), transpose=False)
+    dkv = bk.dot(x, p["w_dkv"].astype(x.dtype), transpose=False)
     ckv, kr = dkv[..., :m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
     cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
     qr = apply_rope(qr, cos, sin)
@@ -263,14 +277,15 @@ def _mla_qkr(p, cfg, x, positions):
 
 
 def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
-                positions=None, cache=None):
+                positions=None, cache=None, backend=None):
+    bk = resolve_backend(backend)
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.num_heads
     if positions is None:
         positions = jnp.arange(S)
-    qn, qr, ckv, kr = _mla_qkr(p, cfg, x, positions)
-    ukv = blend_dot(ckv, p["w_ukv"].astype(x.dtype), transpose=False)
+    qn, qr, ckv, kr = _mla_qkr(p, cfg, x, positions, backend)
+    ukv = bk.dot(ckv, p["w_ukv"].astype(x.dtype), transpose=False)
     ukv = ukv.reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
     kn, v = ukv[..., :m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
     k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :],
@@ -278,7 +293,7 @@ def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
                         axis=-1)
     q = jnp.concatenate([qn, qr], axis=-1)
     out = _attend_seq(q, k, v, causal)          # KV == H here
-    y = blend_dot(out, p["wo"].astype(x.dtype), transpose=False)
+    y = bk.dot(out, p["wo"].astype(x.dtype), transpose=False)
     if cache is not None:
         cc = jax.lax.dynamic_update_slice(
             cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
@@ -288,17 +303,20 @@ def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
     return y, None
 
 
-def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
+def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False,
+               backend=None):
     """Absorbed-matrix MLA decode: attention runs in the compressed latent
     space (scores against ``ckv`` directly), the up-projection is applied
     only to the attended context — the paper-faithful low-memory path.
     The cache is read-only; the one-token latent delta is returned for the
     stack runner to write in place."""
+    bk = resolve_backend(backend)
     m = cfg.mla
     B, S, _ = x.shape
     assert S == 1
     H = cfg.num_heads
-    qn, qr, ckv_new, kr_new = _mla_qkr(p, cfg, x, _decode_positions(pos))
+    qn, qr, ckv_new, kr_new = _mla_qkr(p, cfg, x, _decode_positions(pos),
+                                       backend)
     ckv, kr = cache["ckv"], cache["kr"]
     L = ckv.shape[1]
     w_ukv = p["w_ukv"].astype(x.dtype).reshape(
@@ -322,8 +340,8 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
                + jnp.einsum("bhsl,blr->bshr", att[..., L:].astype(x.dtype),
                             ckv_new.astype(x.dtype)))
     ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv)
-    y = blend_dot(ctx.reshape(B, S, H * m.v_head_dim),
-                  p["wo"].astype(x.dtype), transpose=False)
+    y = bk.dot(ctx.reshape(B, S, H * m.v_head_dim),
+               p["wo"].astype(x.dtype), transpose=False)
     return y, {"ckv": ckv_new.astype(ckv.dtype),
                "kr": kr_new.astype(kr.dtype)}
 
@@ -350,23 +368,26 @@ def init_cross_attn(key, cfg: ModelConfig, d_memory: int | None = None):
     return p, s
 
 
-def cross_attn_memory(p, cfg: ModelConfig, memory):
+def cross_attn_memory(p, cfg: ModelConfig, memory, backend=None):
     """Precompute K/V from the (frozen-per-request) memory stream."""
+    bk = resolve_backend(backend)
     B, M, _ = memory.shape
     KV, hd = cfg.num_kv_heads, cfg.head_dim
-    k = blend_dot(memory, p["wk"].astype(memory.dtype),
-                  transpose=False).reshape(B, M, KV, hd)
-    v = blend_dot(memory, p["wv"].astype(memory.dtype),
-                  transpose=False).reshape(B, M, KV, hd)
+    k = bk.dot(memory, p["wk"].astype(memory.dtype),
+               transpose=False).reshape(B, M, KV, hd)
+    v = bk.dot(memory, p["wv"].astype(memory.dtype),
+               transpose=False).reshape(B, M, KV, hd)
     return {"ck": k, "cv": v}
 
 
-def cross_attn_forward(p, cfg: ModelConfig, x, kv, *, transpose=False):
+def cross_attn_forward(p, cfg: ModelConfig, x, kv, *, transpose=False,
+                       backend=None):
     """x: (B,S,d); kv: precomputed {"ck","cv"} (B,M,KV,hd)."""
     B, S, _ = x.shape
     H, hd = cfg.num_heads, cfg.head_dim
-    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose).reshape(B, S, H, hd)
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose,
+                 backend).reshape(B, S, H, hd)
     M = kv["ck"].shape[1]
     mask = jnp.ones((S, M), dtype=bool)
     out = _gqa_attend(q, kv["ck"], kv["cv"], mask)
-    return _maybe_t(out, p["wo"].astype(x.dtype), transpose)
+    return _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)

@@ -4,15 +4,17 @@ Every init function returns ``(params, specs)`` where ``specs`` mirrors the
 param pytree with tuples of *logical axis names* per dimension; the sharding
 layer (repro.sharding.partition) maps logical names onto mesh axes.
 
-Weight matmuls route through ``obu.blend_dot`` so the OBU "optical transpose"
-is a dot_general dimension swap, never a materialized transpose.
+Weight matmuls route through the execution backend (``core/backend.py``):
+"xla" lowers to ``obu.blend_dot`` dot_generals (the OBU "optical transpose"
+is a dimension swap, never a materialized transpose); "photonic" routes the
+same calls through the Pallas W8A8 kernels.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.obu import blend_dot
+from repro.core.backend import resolve as resolve_backend
 
 
 def _dense_init(key, shape, scale=None):
@@ -79,7 +81,8 @@ def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu"):
     return p, s
 
 
-def apply_mlp(p, x, act: str = "swiglu", transpose: bool = False):
+def apply_mlp(p, x, act: str = "swiglu", transpose: bool = False,
+              backend=None):
     """FFN with OBU-transpose support.
 
     The transposed reuse swaps the role of the up- and down-projections
@@ -88,23 +91,24 @@ def apply_mlp(p, x, act: str = "swiglu", transpose: bool = False):
     crossbar's vertical-input path.  For SwiGLU the gate <-> down pair swaps
     and ``w_up`` is consumed transposed-compatibly unchanged.
     """
+    bk = resolve_backend(backend)
     if act == "swiglu":
         wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
         if transpose:
-            g = blend_dot(x, wd, transpose=True)        # (ff, d).T : d->ff
-            u = blend_dot(x, wu, transpose=False)       # unchanged
+            g = bk.dot(x, wd, transpose=True)           # (ff, d).T : d->ff
+            u = bk.dot(x, wu, transpose=False)          # unchanged
             h = jax.nn.silu(g) * u
-            return blend_dot(h, wg, transpose=True)     # (d, ff).T : ff->d
-        g = blend_dot(x, wg, transpose=False)
-        u = blend_dot(x, wu, transpose=False)
+            return bk.dot(h, wg, transpose=True)        # (d, ff).T : ff->d
+        g = bk.dot(x, wg, transpose=False)
+        u = bk.dot(x, wu, transpose=False)
         h = jax.nn.silu(g) * u
-        return blend_dot(h, wd, transpose=False)
+        return bk.dot(h, wd, transpose=False)
     wu, wd = p["w_up"], p["w_down"]
     if transpose:
-        h = jax.nn.gelu(blend_dot(x, wd, transpose=True))
-        return blend_dot(h, wu, transpose=True)
-    h = jax.nn.gelu(blend_dot(x, wu, transpose=False))
-    return blend_dot(h, wd, transpose=False)
+        h = jax.nn.gelu(bk.dot(x, wd, transpose=True))
+        return bk.dot(h, wu, transpose=True)
+    h = jax.nn.gelu(bk.dot(x, wu, transpose=False))
+    return bk.dot(h, wd, transpose=False)
 
 
 # ------------------------------------------------------------- embeddings
@@ -122,13 +126,15 @@ def init_unembed(key, d_model: int, vocab: int):
     return p, {"w": ("embed", "vocab")}
 
 
-def unembed(p, x):
-    return blend_dot(x, p["w"].astype(x.dtype), transpose=False)
+def unembed(p, x, backend=None):
+    return resolve_backend(backend).dot(x, p["w"].astype(x.dtype),
+                                        transpose=False)
 
 
 def init_linear(key, d_in: int, d_out: int, axes=("embed", "embed")):
     return {"w": _dense_init(key, (d_in, d_out))}, {"w": axes}
 
 
-def apply_linear(p, x, transpose: bool = False):
-    return blend_dot(x, p["w"].astype(x.dtype), transpose=transpose)
+def apply_linear(p, x, transpose: bool = False, backend=None):
+    return resolve_backend(backend).dot(x, p["w"].astype(x.dtype),
+                                        transpose=transpose)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core.backend import resolve as resolve_backend
 from repro.models.layers import _dense_init, apply_mlp, init_mlp
 
 
@@ -119,32 +120,84 @@ def _expert_gate_perms(mcfg: MoEConfig):
     return jnp.asarray(table)
 
 
-def apply_moe(p, x, mcfg: MoEConfig, transpose: bool = False):
-    """x: (B, S, d) -> (B, S, d) plus aux losses."""
+def _photonic_expert_ffn(bk, p, xe, mcfg: MoEConfig, dtype, transpose):
+    """Expert FFN on the photonic backend: per-expert Pallas W8A8 matmuls.
+
+    With PRM-blended experts (``num_basic_experts`` = R_e < E) the E logical
+    experts of a bank share R_e physical weights — exactly the write-once /
+    reuse-T-times situation, with *independent* activation streams (each
+    logical expert's capacity buffer).  Those stream through the
+    reuse-resident kernel: the basic bank is programmed once and the
+    E/R_e buffers pass through the VMEM-resident tile."""
+    G, E, C, d = xe.shape
+    rows = xe.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+    wg, wu, wd = (p["w_gate"].astype(dtype), p["w_up"].astype(dtype),
+                  p["w_down"].astype(dtype))
+    nb = wg.shape[0]                       # R_e physical banks (== E if none)
+    blended = nb < E
+
+    def bank_dot(h, w_bank, transpose_w=False):
+        if blended and not transpose_w and E % nb == 0:
+            outs = [None] * E
+            for r in range(nb):            # logical experts e ≡ r (mod R_e)
+                y = bk.reuse_dot(h[r::nb], w_bank[r])
+                for j, e in enumerate(range(r, E, nb)):
+                    outs[e] = y[j]
+            return jnp.stack(outs)
+        return jnp.stack([bk.dot(h[e], w_bank[e % nb], transpose=transpose_w)
+                          for e in range(E)])
+
+    if transpose:
+        gate = bank_dot(rows, wd, transpose_w=True)  # W_down.T as up-proj
+        up = bank_dot(rows, wu)
+        h = jax.nn.silu(gate) * up
+        out = bank_dot(h, wg, transpose_w=True)      # W_gate.T as down-proj
+    else:
+        gate = bank_dot(rows, wg)
+        if blended:
+            perms = _expert_gate_perms(mcfg)         # (E, f) static
+            gate = jnp.take_along_axis(gate, perms[:, None, :], axis=-1)
+        up = bank_dot(rows, wu)
+        h = jax.nn.silu(gate) * up
+        out = bank_dot(h, wd)
+    return out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
+
+
+def apply_moe(p, x, mcfg: MoEConfig, transpose: bool = False, backend=None):
+    """x: (B, S, d) -> (B, S, d) plus aux losses.
+
+    Routing stays electronic/fp32 on every backend (the router is a tiny
+    matmul and top-k wants full precision); only the expert FFN banks route
+    through the photonic kernels."""
+    bk = resolve_backend(backend)
     B, S, d = x.shape
     G, g = _group_shape(B * S, mcfg)
     xg = x.reshape(G, g, d)
     dispatch, combine, aux = route(p, xg, mcfg)
     xe = jnp.einsum("ngec,ngd->necd", dispatch.astype(x.dtype), xg)
-    wg, wu, wd = _expert_weights(p, mcfg, x.dtype)
     blend_experts = bool(mcfg.num_basic_experts
                          and mcfg.num_basic_experts < mcfg.num_experts)
-    if transpose:
-        gate = jnp.einsum("necd,efd->necf", xe, wd)  # W_down.T as up-proj
-        up = jnp.einsum("necd,edf->necf", xe, wu)
-        h = jax.nn.silu(gate) * up
-        ye = jnp.einsum("necf,edf->necd", h, wg)     # W_gate.T as down-proj
+    if bk.is_photonic:
+        ye = _photonic_expert_ffn(bk, p, xe, mcfg, x.dtype, transpose)
     else:
-        gate = jnp.einsum("necd,edf->necf", xe, wg)
-        if blend_experts:
-            perms = _expert_gate_perms(mcfg)            # (E, f) static
-            gate = jnp.take_along_axis(
-                gate, perms[None, :, None, :], axis=-1)
-        up = jnp.einsum("necd,edf->necf", xe, wu)
-        h = jax.nn.silu(gate) * up
-        ye = jnp.einsum("necf,efd->necd", h, wd)
+        wg, wu, wd = _expert_weights(p, mcfg, x.dtype)
+        if transpose:
+            gate = jnp.einsum("necd,efd->necf", xe, wd)  # W_down.T as up-proj
+            up = jnp.einsum("necd,edf->necf", xe, wu)
+            h = jax.nn.silu(gate) * up
+            ye = jnp.einsum("necf,edf->necd", h, wg)     # W_gate.T as down-proj
+        else:
+            gate = jnp.einsum("necd,edf->necf", xe, wg)
+            if blend_experts:
+                perms = _expert_gate_perms(mcfg)            # (E, f) static
+                gate = jnp.take_along_axis(
+                    gate, perms[None, :, None, :], axis=-1)
+            up = jnp.einsum("necd,edf->necf", xe, wu)
+            h = jax.nn.silu(gate) * up
+            ye = jnp.einsum("necf,efd->necd", h, wd)
     yg = jnp.einsum("ngec,necd->ngd", combine.astype(x.dtype), ye)
     y = yg.reshape(B, S, d)
     if "shared" in p:
-        y = y + apply_mlp(p["shared"], x, act="swiglu", transpose=transpose)
+        y = y + apply_mlp(p["shared"], x, act="swiglu", transpose=transpose,
+                          backend=bk)
     return y, aux

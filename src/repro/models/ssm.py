@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.models.layers import _dense_init, apply_norm
-from repro.core.obu import blend_dot
+from repro.core.backend import resolve as resolve_backend
 
 
 def ssm_dims(cfg: ModelConfig):
@@ -168,12 +168,13 @@ def ssd_reference(x, dt, A, B, C, h0=None):
 # full mamba2 block
 # =========================================================================
 def ssm_forward(p, cfg: ModelConfig, x, *, transpose=False,
-                return_cache=False):
+                return_cache=False, backend=None):
     """Full-sequence mamba2 block (train / prefill)."""
+    bk = resolve_backend(backend)
     s = cfg.ssm
     B_, S, d = x.shape
     d_in, H, conv_dim = ssm_dims(cfg)
-    proj = blend_dot(x, p["w_in"].astype(x.dtype), transpose=False)
+    proj = bk.dot(x, p["w_in"].astype(x.dtype), transpose=False)
     z, xBC, dt = _split_in(cfg, proj)
     xBC = _causal_conv(xBC, p["conv_k"].astype(x.dtype))
     gn = s.n_groups * s.d_state
@@ -187,30 +188,33 @@ def ssm_forward(p, cfg: ModelConfig, x, *, transpose=False,
     y = y.reshape(B_, S, d_in)
     y = apply_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z),
                    kind="rms", eps=cfg.norm_eps)
-    out = blend_dot(y, p["w_out"].astype(x.dtype),
-                    transpose=transpose and d_in == d)
+    out = bk.dot(y, p["w_out"].astype(x.dtype),
+                 transpose=transpose and d_in == d)
     if return_cache:
-        return out, {"h": h_last, "conv": _conv_tail(cfg, x, p)}
+        return out, {"h": h_last, "conv": _conv_tail(cfg, x, p, bk)}
     return out, None
 
 
-def _conv_tail(cfg, x, p):
+def _conv_tail(cfg, x, p, backend=None):
     """Last (W-1) pre-conv xBC rows, for decode continuation."""
+    bk = resolve_backend(backend)
     s = cfg.ssm
     d_in, _, conv_dim = ssm_dims(cfg)
-    proj = blend_dot(x[:, -(s.conv_width - 1):, :],
-                     p["w_in"].astype(x.dtype), transpose=False)
+    proj = bk.dot(x[:, -(s.conv_width - 1):, :],
+                  p["w_in"].astype(x.dtype), transpose=False)
     _, xBC, _ = _split_in(cfg, proj)
     return xBC
 
 
-def ssm_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
+def ssm_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False,
+               backend=None):
     """Single-token recurrent step. x: (B,1,d)."""
+    bk = resolve_backend(backend)
     s = cfg.ssm
     B_, S, d = x.shape
     assert S == 1
     d_in, H, conv_dim = ssm_dims(cfg)
-    proj = blend_dot(x, p["w_in"].astype(x.dtype), transpose=False)
+    proj = bk.dot(x, p["w_in"].astype(x.dtype), transpose=False)
     z, xBC_new, dt = _split_in(cfg, proj)          # (B,1,*)
     # causal conv against the cached tail
     hist = jnp.concatenate([cache["conv"],
@@ -236,8 +240,8 @@ def ssm_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False):
     y = y.reshape(B_, 1, d_in)
     y = apply_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z),
                    kind="rms", eps=cfg.norm_eps)
-    out = blend_dot(y, p["w_out"].astype(x.dtype),
-                    transpose=transpose and d_in == d)
+    out = bk.dot(y, p["w_out"].astype(x.dtype),
+                 transpose=transpose and d_in == d)
     return out, {"h": h, "conv": hist[:, 1:, :]}
 
 

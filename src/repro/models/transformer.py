@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import backend as backend_lib
 from repro.core.prm import ReuseConfig
 from repro.core.sharing import SharedStack, run_stack, stacked_init
 from repro.models import attention as attn
@@ -131,6 +132,7 @@ def init_layer(key, cfg: ModelConfig, mixer_kind: str, ffn_kind: str):
 def apply_layer(p, cfg: ModelConfig, h, cache, aux, *, mixer_kind, ffn_kind,
                 mode, causal, pos, ctx, transpose):
     """One pre-norm residual layer.  Returns (h, cache, aux)."""
+    bk = ctx.get("backend") or backend_lib.XLA
     hn = apply_norm(p["norm1"], h, cfg.norm, cfg.norm_eps)
     new_cache = cache
     if mixer_kind == "attn":
@@ -140,28 +142,30 @@ def apply_layer(p, cfg: ModelConfig, h, cache, aux, *, mixer_kind, ffn_kind,
             dec = attn.gqa_decode_legacy
         if mode == "decode":
             y, new_cache = dec(p["mixer"], cfg, hn, cache, pos,
-                               transpose=transpose)
+                               transpose=transpose, backend=bk)
         else:
             y, new_cache = fwd(p["mixer"], cfg, hn, transpose=transpose,
                                causal=causal,
-                               cache=cache if mode == "prefill" else None)
+                               cache=cache if mode == "prefill" else None,
+                               backend=bk)
     elif mixer_kind == "ssm":
         if mode == "decode":
             y, new_cache = ssm_lib.ssm_decode(p["mixer"], cfg, hn, cache, pos,
-                                              transpose=transpose)
+                                              transpose=transpose, backend=bk)
         else:
             y, new_cache = ssm_lib.ssm_forward(
                 p["mixer"], cfg, hn, transpose=transpose,
-                return_cache=(mode == "prefill"))
+                return_cache=(mode == "prefill"), backend=bk)
     elif mixer_kind == "cross_attn":
         if mode == "decode":
             kv = cache
             y = attn.cross_attn_forward(p["mixer"], cfg, hn, kv,
-                                        transpose=transpose)
+                                        transpose=transpose, backend=bk)
         else:
-            kv = attn.cross_attn_memory(p["mixer"], cfg, ctx["memory"])
+            kv = attn.cross_attn_memory(p["mixer"], cfg, ctx["memory"],
+                                        backend=bk)
             y = attn.cross_attn_forward(p["mixer"], cfg, hn, kv,
-                                        transpose=transpose)
+                                        transpose=transpose, backend=bk)
             if mode == "prefill":
                 new_cache = jax.tree.map(lambda b, n: n.astype(b.dtype),
                                          cache, kv)
@@ -169,23 +173,25 @@ def apply_layer(p, cfg: ModelConfig, h, cache, aux, *, mixer_kind, ffn_kind,
         if mode == "decode":
             y, self_c = attn.gqa_decode(p["mixer"]["self"], cfg, hn,
                                         cache["self"], pos,
-                                        transpose=transpose)
+                                        transpose=transpose, backend=bk)
             h = h + y
             hn2 = apply_norm(p["norm_cross"], h, cfg.norm, cfg.norm_eps)
             y = attn.cross_attn_forward(p["mixer"]["cross"], cfg, hn2,
-                                        cache["cross"], transpose=transpose)
+                                        cache["cross"], transpose=transpose,
+                                        backend=bk)
             new_cache = {"self": self_c, "cross": cache["cross"]}
         else:
             y, self_c = attn.gqa_forward(
                 p["mixer"]["self"], cfg, hn, transpose=transpose,
                 causal=causal,
-                cache=cache["self"] if mode == "prefill" else None)
+                cache=cache["self"] if mode == "prefill" else None,
+                backend=bk)
             h = h + y
             hn2 = apply_norm(p["norm_cross"], h, cfg.norm, cfg.norm_eps)
             kv = attn.cross_attn_memory(p["mixer"]["cross"], cfg,
-                                        ctx["memory"])
+                                        ctx["memory"], backend=bk)
             y = attn.cross_attn_forward(p["mixer"]["cross"], cfg, hn2, kv,
-                                        transpose=transpose)
+                                        transpose=transpose, backend=bk)
             new_cache = ({"self": self_c,
                           "cross": jax.tree.map(
                               lambda b, n: n.astype(b.dtype),
@@ -198,10 +204,11 @@ def apply_layer(p, cfg: ModelConfig, h, cache, aux, *, mixer_kind, ffn_kind,
         hn = apply_norm(p["norm2"], h, cfg.norm, cfg.norm_eps)
         if ffn_kind == "moe":
             y, moe_aux = moe_lib.apply_moe(p["ffn"], hn, cfg.moe,
-                                           transpose=transpose)
+                                           transpose=transpose, backend=bk)
             aux = aux + moe_aux["load_balance"]
         else:
-            y = apply_mlp(p["ffn"], hn, act=cfg.mlp_act, transpose=transpose)
+            y = apply_mlp(p["ffn"], hn, act=cfg.mlp_act, transpose=transpose,
+                          backend=bk)
         h = h + y
     if ctx.get("act_pspec") is not None:
         h = jax.lax.with_sharding_constraint(h, ctx["act_pspec"])
@@ -265,7 +272,8 @@ def run_segment(params, cfg: ModelConfig, spec: SegmentSpec,
     block = group_block_fn(cfg, spec, mode, pos, ctx)
     use_carry = mode == "decode" and not ctx.get("legacy_decode")
     return run_stack(block, params, h, shared, cache=cache, aux0=aux,
-                     remat=remat, decode_pos=pos if use_carry else None)
+                     remat=remat, decode_pos=pos if use_carry else None,
+                     backend=ctx.get("backend"))
 
 
 # =========================================================================
@@ -336,7 +344,7 @@ def _shareds_for(cfg: ModelConfig):
 def _encoder_pass(params, cfg, batch, ctx, aux):
     """Whisper encoder over stub frame embeddings -> memory (B, F, d)."""
     frames = batch["audio_embeds"].astype(ctx["dtype"])
-    h = apply_linear(params["audio_proj"], frames)
+    h = apply_linear(params["audio_proj"], frames, backend=ctx.get("backend"))
     spec = build_segments(cfg)[0]
     shared = _shareds_for(cfg)[spec.name]
     h, _, aux = run_segment(params["segments"][spec.name], cfg, spec, shared,
@@ -347,7 +355,8 @@ def _encoder_pass(params, cfg, batch, ctx, aux):
 
 
 def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
-            pos=None, act_pspec=None, remat=False, legacy_decode=False):
+            pos=None, act_pspec=None, remat=False, legacy_decode=False,
+            execution=None):
     """Run the model.
 
     batch: {"tokens": (B, S)} plus modality extras:
@@ -357,11 +366,16 @@ def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
       aligned batch — or a (B,) int vector of per-slot positions for the
       continuous scheduler; legacy_decode supports scalar ``pos`` only).
     caches: pytree {segment: [R, T, {...}]} (prefill output / decode in-out).
+    execution: overrides ``cfg.execution`` ("xla" | "photonic" | Backend);
+      None uses the config's backend (core/backend.py).
     Returns (logits, new_caches, aux).
     """
     dtype = jnp.dtype(cfg.compute_dtype)
+    backend = backend_lib.resolve(
+        execution if execution is not None else cfg)
     ctx: dict[str, Any] = {"act_pspec": act_pspec, "dtype": dtype,
-                           "remat": remat, "legacy_decode": legacy_decode}
+                           "remat": remat, "legacy_decode": legacy_decode,
+                           "backend": backend}
     aux = jnp.float32(0.0)
     segs = build_segments(cfg)
     shareds = _shareds_for(cfg)
@@ -371,7 +385,8 @@ def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
             ctx["memory"] = None            # cross K/V lives in the cache
         else:
             img = batch["image_embeds"].astype(dtype)
-            ctx["memory"] = apply_linear(params["vision_proj"], img)
+            ctx["memory"] = apply_linear(params["vision_proj"], img,
+                                         backend=backend)
     if cfg.family == "audio":
         if mode == "decode":
             ctx["memory"] = None
@@ -392,10 +407,12 @@ def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
             new_caches[spec.name] = seg_cache
     h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
     if cfg.tie_embeddings:
-        logits = jnp.einsum("bsd,vd->bsv", h,
-                            params["embed"]["table"].astype(h.dtype))
+        # x @ table.T — the OBU-transpose orientation of the embedding
+        # matrix, so the photonic backend's pre-swapped kernel serves it too
+        logits = backend.dot(h, params["embed"]["table"].astype(h.dtype),
+                             transpose=True)
     else:
-        logits = unembed(params["lm_head"], h)
+        logits = unembed(params["lm_head"], h, backend=backend)
     return logits, new_caches, aux
 
 

@@ -22,20 +22,23 @@ def cast_params(params, cfg: ModelConfig):
 
 
 def prefill_step(params, cfg: ModelConfig, batch, cache_len: int,
-                 act_pspec=None):
+                 act_pspec=None, execution=None):
     """Run the prompt through the model, filling fresh caches.
 
+    ``execution`` overrides ``cfg.execution`` ("xla" | "photonic") — the
+    serving A/B knob for the matmul substrate (core/backend.py).
     Returns (last_token_logits (B, V), caches)."""
     B = batch["tokens"].shape[0]
     caches = tfm.init_caches(cfg, B, cache_len,
                              dtype=jnp.dtype(cfg.compute_dtype))
     logits, caches, _ = tfm.forward(params, cfg, batch, mode="prefill",
-                                    caches=caches, act_pspec=act_pspec)
+                                    caches=caches, act_pspec=act_pspec,
+                                    execution=execution)
     return logits[:, -1, :], caches
 
 
 def decode_step(params, cfg: ModelConfig, batch, caches, pos,
-                act_pspec=None, legacy_decode=False):
+                act_pspec=None, legacy_decode=False, execution=None):
     """One token for every sequence in the batch. batch["tokens"]: (B, 1).
 
     ``pos`` is a scalar (aligned decode) or a (B,) per-slot position vector
@@ -43,7 +46,8 @@ def decode_step(params, cfg: ModelConfig, batch, caches, pos,
     logits, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
                                     caches=caches, pos=pos,
                                     act_pspec=act_pspec,
-                                    legacy_decode=legacy_decode)
+                                    legacy_decode=legacy_decode,
+                                    execution=execution)
     return logits[:, 0, :], caches
 
 
@@ -64,7 +68,8 @@ def sample(logits, vocab_size: int, key=None, temperature: float = 0.0):
 
 
 def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
-             extras=None, temperature: float = 0.0, seed: int = 0):
+             extras=None, temperature: float = 0.0, seed: int = 0,
+             execution=None):
     """Host-side autoregressive loop (examples / tests).
 
     prompt: (B, S) int32.  Returns (B, S + max_new)."""
@@ -76,11 +81,12 @@ def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
         batch.update(extras)
     # prefill and decode+sample each run as ONE jitted computation: the
     # sampler fuses with the model step instead of round-tripping logits
-    pf = jax.jit(lambda p, b: prefill_step(p, cfg, b, cache_len))
+    pf = jax.jit(lambda p, b: prefill_step(p, cfg, b, cache_len,
+                                           execution=execution))
 
     @jax.jit
     def dec(p, b, c, pos, key):
-        logits, c = decode_step(p, cfg, b, c, pos)
+        logits, c = decode_step(p, cfg, b, c, pos, execution=execution)
         return sample(logits, cfg.vocab_size, key, temperature), c
 
     logits, caches = pf(params, batch)

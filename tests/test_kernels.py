@@ -58,6 +58,36 @@ def test_photonic_mvm_offset_exactness():
                                rtol=1e-6, atol=1e-5)
 
 
+def test_photonic_mvm_t_vs_ref():
+    """Pre-swapped transpose variant (OBU optical transpose) vs oracle."""
+    from repro.kernels.photonic_mvm import photonic_mvm_t
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    xq = jax.random.randint(k1, (30, 50), -127, 128, dtype=jnp.int8)
+    wq = jax.random.randint(k2, (21, 50), -127, 128, dtype=jnp.int8)
+    xs = jnp.float32(0.02)
+    ws = jax.random.uniform(jax.random.PRNGKey(1), (21,), minval=0.1,
+                            maxval=2.0)
+    got = photonic_mvm_t(xq, wq, xs, ws, bm=16, bk=16, bn=16, interpret=True)
+    want = ref.photonic_mvm_t_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_photonic_mvm_resident_vs_ref():
+    """Reuse-resident kernel (weight programmed once, T streams) vs oracle."""
+    from repro.kernels.photonic_mvm import photonic_mvm_resident
+    k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+    xq = jax.random.randint(k1, (3, 20, 40), -127, 128, dtype=jnp.int8)
+    wq = jax.random.randint(k2, (40, 24), -127, 128, dtype=jnp.int8)
+    xs = jnp.array([0.01, 0.02, 0.03])
+    ws = jax.random.uniform(jax.random.PRNGKey(2), (24,), minval=0.1,
+                            maxval=2.0)
+    got = photonic_mvm_resident(xq, wq, xs, ws, bm=8, bn=8, interpret=True)
+    want = ref.photonic_mvm_resident_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
 # ======================================================================
 # blend (blocked shuffle + bias + act)
 # ======================================================================
@@ -71,6 +101,21 @@ def test_blend_shuffle_vs_ref(nblk, block, act):
     perm = np.random.default_rng(3).permutation(nblk)
     got = ops.blend_shuffle(x, bias, perm, block=block, activation=act)
     want = ref.blend_shuffle_ref(x, bias, perm, block, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_blend_shuffle_ragged_rows():
+    """Row counts that don't divide the row block pad instead of crashing
+    (ragged serving batches; ISSUE-2 satellite fix)."""
+    from repro.kernels.blend import blend_shuffle as raw_blend
+    C, block, M = 32, 8, 37
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, C))
+    bias = jax.random.normal(jax.random.PRNGKey(1), (C,))
+    perm = np.random.default_rng(7).permutation(C // block)
+    got = raw_blend(x, bias, perm, block=block, bm=16, activation="relu",
+                    interpret=True)
+    want = ref.blend_shuffle_ref(x, bias, perm, block, activation="relu")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6, atol=1e-6)
 
