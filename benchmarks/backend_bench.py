@@ -5,10 +5,29 @@
 For each arch (smoke-scale so interpret-mode Pallas stays CPU-tractable) the
 same params/batch run under ``execution="xla"`` and ``execution="photonic"``
 (core/backend.py); rows report per-backend step time and the photonic-vs-xla
-parity error (rel-L2, which must sit within W8A8 quantization tolerance —
-the acceptance criterion of ISSUE 2).  A kernel-level microbench compares
-the reuse-resident kernel (weight programmed once, T streams) against T
-independent per-call kernels.
+parity error (rel-L2, which must sit within W8A8 quantization tolerance).
+
+The decode comparison now has THREE rows per arch (the serving hot path):
+
+  * ``xla``                — fp dot_generals;
+  * ``photonic``           — legacy path: W8 tiles + scales re-derived from
+    the fp weights inside every jitted step;
+  * ``photonic_prepared``  — the compile-once ``Program`` path: the banks
+    are quantized once at ``Program.build`` and every step runs straight
+    into the kernels.
+
+Acceptance (ISSUE 3) is gated on the ``prepared_decode`` comparison: a
+serving-width dense LM (d_model 512, decode-shaped ``bm=8`` tiles) decoded
+through the legacy re-quantize-per-step path vs the prepared Program, with
+bit-identical logits and measurably faster prepared steps; plus
+Program-level photonic-vs-xla parity rel-L2 <= 0.055 on the tier-1 parity
+arch.  (At the 64-wide smoke archs the interpret-mode Pallas grid machinery
+— a CPU-emulation constant absent from native TPU lowering — dominates the
+step so the O(params) quantization tax sits inside the noise; the per-arch
+prepared rows are reported for transparency, not gated.)
+
+A kernel-level microbench compares the reuse-resident kernel (weight
+programmed once, T streams) against T independent per-call kernels.
 
 CSV convention: ``name,us_per_call,derived``.  Details land in
 results/backend_bench.json.
@@ -23,6 +42,13 @@ import time
 
 import numpy as np
 
+# Program-level photonic-vs-xla rel-L2 bound (ISSUE 3 acceptance) for the
+# archs the tier-1 parity tests cover; other archs carry the looser W8A8
+# bound their pre-existing legacy parity already sits at (mamba2 smoke
+# measured 0.08-0.12 before the Program API existed).
+PARITY_TOL = {"deepseek-7b": 0.055}
+PARITY_TOL_DEFAULT = 0.25
+
 
 def _rel_l2(a, b):
     a = np.asarray(a, np.float32)
@@ -30,9 +56,39 @@ def _rel_l2(a, b):
     return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
 
 
+def _time_us(fn, reps):
+    out = fn()
+    jax_block(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax_block(out)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def _time_decode_us(step, caches, reps):
+    """Time ``step(caches) -> (logits, caches)``, rebinding the cache each
+    rep — decode cells donate their cache buffers on accelerators, so a
+    donated buffer must never be passed twice."""
+    out, caches = step(caches)
+    jax_block((out, caches))
+    t0 = time.time()
+    for _ in range(reps):
+        out, caches = step(caches)
+    jax_block((out, caches))
+    return (time.time() - t0) / reps * 1e6, out, caches
+
+
+def jax_block(tree):
+    import jax
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
 def bench_model(arch: str, B: int, S: int, reps: int, details: dict):
     import jax
-    import jax.numpy as jnp
+    from repro.api import Program
     from repro.configs import smoke_variant
     from repro.models import transformer as tfm
     from repro.serve import engine
@@ -48,37 +104,96 @@ def bench_model(arch: str, B: int, S: int, reps: int, details: dict):
         c = dataclasses.replace(cfg, execution=execution)
         fwd = jax.jit(lambda p, b, c=c: tfm.forward(p, c, b,
                                                     mode="train")[0])
-        out = fwd(params, batch)
-        out.block_until_ready()              # compile outside the timing
-        t0 = time.time()
-        for _ in range(reps):
-            out = fwd(params, batch)
-        out.block_until_ready()
-        fwd_us[execution] = (time.time() - t0) / reps * 1e6
+        us, out = _time_us(lambda: fwd(params, batch), reps)
+        fwd_us[execution] = us
         logits[execution] = out
-        rows.append((f"backend_{arch}_{execution}_fwd", fwd_us[execution]))
+        rows.append((f"backend_{arch}_{execution}_fwd", us))
     err = _rel_l2(logits["photonic"], logits["xla"])
-    # one decode step per backend (the serving hot path)
+
+    # ---- decode step: xla / photonic (re-quantize per step) / prepared ----
     dec_us = {}
+    dec_logits = {}
     for execution in ("xla", "photonic"):
-        lx, caches = engine.prefill_step(params, cfg,
-                                         {"tokens": batch["tokens"]}, S + 1,
-                                         execution=execution)
+        _, caches = engine.prefill_step(params, cfg,
+                                        {"tokens": batch["tokens"]}, S + 1,
+                                        execution=execution)
         dec = jax.jit(lambda p, b, ca, pos, e=execution:
                       engine.decode_step(p, cfg, b, ca, pos, execution=e))
         b1 = {"tokens": batch["tokens"][:, :1]}
-        out, caches = dec(params, b1, caches, S)
-        out.block_until_ready()
-        t0 = time.time()
-        for _ in range(reps):
-            out, caches = dec(params, b1, caches, S)
-        out.block_until_ready()
-        dec_us[execution] = (time.time() - t0) / reps * 1e6
-        rows.append((f"backend_{arch}_{execution}_decode",
-                     dec_us[execution]))
+        us, out, caches = _time_decode_us(
+            lambda ca: dec(params, b1, ca, S), caches, reps)
+        dec_us[execution] = us
+        dec_logits[execution] = out
+        rows.append((f"backend_{arch}_{execution}_decode", us))
+
+    # the compile-once path: banks quantized ONCE at build, decode steps
+    # run straight into the kernels
+    prog = Program.build(cfg, params, execution="photonic")
+    _, pcaches = prog.prefill(batch, S + 1)
+    toks1 = batch["tokens"][:, :1]
+    us, pout, pcaches = _time_decode_us(
+        lambda ca: prog.decode(toks1, ca, S), pcaches, reps)
+    dec_us["photonic_prepared"] = us
+    dec_logits["photonic_prepared"] = pout
+    speedup = dec_us["photonic"] / us
+    rows.append((f"backend_{arch}_photonic_prepared_decode", us))
+
+    # Program-level parity: prepared photonic decode vs the xla Program
+    prog_x = Program.build(cfg, params, execution="xla")
+    _, xcaches = prog_x.prefill(batch, S + 1)
+    xout, _ = prog_x.decode(toks1, xcaches, S)
+    prog_err = _rel_l2(pout, xout)
+
     details[arch] = {"B": B, "S": S, "fwd_us": fwd_us, "decode_us": dec_us,
-                     "parity_rel_l2": err}
-    return rows, err
+                     "parity_rel_l2": err,
+                     "program_parity_rel_l2": prog_err,
+                     "prepared_decode_speedup_vs_requantize": speedup}
+    return rows, err, prog_err, speedup
+
+
+def bench_prepared_decode(reps: int, details: dict):
+    """The ISSUE-3 headline: decode through the re-quantize-per-step path
+    vs the compile-once prepared bank, on a serving-width dense LM with
+    decode-shaped kernel tiles.  Same kernels, same math (bit-identical
+    logits) — the delta is exactly the per-step W8 derivation tax."""
+    import jax
+    import jax.numpy as jnp
+    from repro.api import Program
+    from repro.configs.base import ModelConfig
+    from repro.core.backend import Backend
+    from repro.models import transformer as tfm
+    from repro.serve import engine
+
+    cfg = ModelConfig(name="prepared-bench-lm", family="dense",
+                      num_layers=2, d_model=512, num_heads=8,
+                      num_kv_heads=4, d_ff=1024, vocab_size=1024,
+                      compute_dtype="float32")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    bk = Backend("photonic", bm=8)          # decode microbatch tile
+    b1 = {"tokens": batch["tokens"][:, :1]}
+
+    _, caches = engine.prefill_step(params, cfg, batch, S + 1, execution=bk)
+    dec = jax.jit(lambda p, b, ca, pos: engine.decode_step(
+        p, cfg, b, ca, pos, execution=bk))
+    us_legacy, out_legacy, _ = _time_decode_us(
+        lambda ca: dec(params, b1, ca, S), caches, reps)
+
+    prog = Program.build(cfg, params, execution=bk)
+    _, pcaches = prog.prefill(batch, S + 1)
+    us_prep, out_prep, _ = _time_decode_us(
+        lambda ca: prog.decode(b1["tokens"], ca, S), pcaches, reps)
+
+    identical = bool(jnp.all(out_legacy == out_prep))
+    speedup = us_legacy / us_prep
+    details["prepared_decode"] = {
+        "model": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                  "num_layers": cfg.num_layers, "B": B},
+        "requantize_us": us_legacy, "prepared_us": us_prep,
+        "speedup": speedup, "logits_bit_identical": identical}
+    return us_legacy, us_prep, speedup, identical
 
 
 def bench_resident_kernel(reps: int, details: dict):
@@ -134,11 +249,24 @@ def main(argv=None) -> int:
     details: dict = {}
     print("name,us_per_call,derived")
     worst = 0.0
+    parity_ok = True
     for arch in archs:
-        rows, err = bench_model(arch, args.batch, args.seq, reps, details)
+        rows, err, prog_err, speedup = bench_model(arch, args.batch,
+                                                   args.seq, reps, details)
         worst = max(worst, err)
+        tol = PARITY_TOL.get(arch, PARITY_TOL_DEFAULT)
+        parity_ok = parity_ok and prog_err <= tol
         for name, us in rows:
             print(f"{name},{us:.1f},parity rel-L2 {err:.4f}", flush=True)
+        print(f"prepared_speedup_{arch},{speedup:.2f},"
+              f"x over re-quantize-per-step (Program parity rel-L2 "
+              f"{prog_err:.4f} tol {tol}; not gated at smoke width)",
+              flush=True)
+    us_leg, us_prep, speedup, identical = bench_prepared_decode(
+        max(reps, 3), details)
+    print(f"prepared_decode_serving_lm,{us_prep:.1f},"
+          f"{speedup:.2f}x over re-quantize-per-step {us_leg:.1f}us "
+          f"(d=512, bit-identical: {identical})", flush=True)
     us_res, us_per = bench_resident_kernel(reps, details)
     print(f"resident_kernel_T4,{us_res:.1f},"
           f"vs {us_per:.1f}us per-call (1 vs 4 weight programs)", flush=True)
@@ -146,9 +274,14 @@ def main(argv=None) -> int:
     with open("results/backend_bench.json", "w") as f:
         json.dump(details, f, indent=1)
     print("\n# details written to results/backend_bench.json")
-    # acceptance: photonic within W8A8 tolerance of xla
-    ok = worst < 0.25
-    print(f"# parity worst rel-L2 {worst:.4f} -> {'OK' if ok else 'FAIL'}")
+    # acceptance: photonic within W8A8 tolerance of xla; Program parity
+    # within the per-arch ISSUE-3 bound; prepared decode measurably faster
+    # than re-quantize-per-step (bit-identically) at serving width
+    ok = (worst < 0.25 and parity_ok and identical and speedup > 1.15)
+    print(f"# parity worst rel-L2 {worst:.4f}; Program parity within "
+          f"per-arch tolerance: {parity_ok}; prepared serving-LM decode "
+          f"{speedup:.2f}x (bit-identical {identical}) "
+          f"-> {'OK' if ok else 'FAIL'}")
     return 0 if ok else 1
 
 

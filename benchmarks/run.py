@@ -254,15 +254,22 @@ def bench_fig1():
 
 
 def bench_backend(quick=False):
-    """xla-vs-photonic execution backend on a paper model (ISSUE 2):
-    per-backend step time + W8A8 parity, and the reuse-resident kernel
-    vs per-call weight programming."""
+    """xla-vs-photonic execution backend on a paper model (ISSUE 2/3):
+    per-backend step time + W8A8 parity, the compile-once prepared-bank
+    decode vs re-quantize-per-step, and the reuse-resident kernel vs
+    per-call weight programming."""
     from benchmarks import backend_bench
     det = {}
     reps = 1 if quick else 3
-    rows_, err = backend_bench.bench_model("deepseek-7b", 2, 16, reps, det)
+    rows_, err, prog_err, _ = backend_bench.bench_model("deepseek-7b", 2,
+                                                        16, reps, det)
     for name, us in rows_:
         row(name, us, f"photonic-vs-xla rel-L2 {err:.4f}")
+    us_leg, us_prep, speedup, identical = \
+        backend_bench.bench_prepared_decode(reps, det)
+    row("prepared_decode_serving_lm", us_prep,
+        f"{speedup:.2f}x over re-quantize {us_leg:.1f}us "
+        f"(bit-identical {identical}; Program parity {prog_err:.4f})")
     us_res, us_per = backend_bench.bench_resident_kernel(reps, det)
     row("resident_kernel_T4", us_res,
         f"vs {us_per:.1f}us per-call (1 vs 4 weight programs)")

@@ -52,9 +52,9 @@ def bench_cfg():
                                       "shuffle"), shuffle_groups=8))
 
 
-def run_wave(params, cfg, reqs, wave_size: int):
+def run_wave(prog, reqs, wave_size: int):
     from repro.serve.batcher import WaveBatcher
-    b = WaveBatcher(params, cfg, wave_size=wave_size)
+    b = WaveBatcher(prog, wave_size=wave_size)
     for r in reqs:
         b.submit(r)
     t0 = time.time()
@@ -62,9 +62,9 @@ def run_wave(params, cfg, reqs, wave_size: int):
     return comps, b.stats, time.time() - t0
 
 
-def run_continuous(params, cfg, reqs, capacity: int):
+def run_continuous(prog, reqs, capacity: int):
     from repro.serve.scheduler import ContinuousScheduler
-    s = ContinuousScheduler(params, cfg, capacity=capacity, max_len=48,
+    s = ContinuousScheduler(prog, capacity=capacity, max_len=48,
                             prefill_bucket=4)
     for r in reqs:
         s.submit(r)
@@ -82,17 +82,21 @@ def main():
     n = args.requests or (12 if args.quick else 24)
 
     import jax
+    from repro.api import Program
     from repro.models import transformer as tfm
 
     cfg = bench_cfg()
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    # ONE compile-once Program serves both schedulers (same bank, shared
+    # jit-cell cache) — the comparison isolates pure scheduling overhead
+    prog = Program.build(cfg, params)
     reqs = make_trace(cfg.vocab_size, n)
 
     print("name,us_per_call,derived")
     details = {}
     results = {}
     for tag, runner in (("wave", run_wave), ("continuous", run_continuous)):
-        comps, st, dt = runner(params, cfg, reqs, args.slots)
+        comps, st, dt = runner(prog, reqs, args.slots)
         assert sorted(c.rid for c in comps) == list(range(n))
         tput = st.generated_tokens / dt
         results[tag] = st

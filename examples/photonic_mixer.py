@@ -17,7 +17,6 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks._vision_task import make_task, train_classifier
 from repro.core.costmodel import stack_cost

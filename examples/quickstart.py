@@ -51,7 +51,7 @@ def train(cfg, tag):
         last = float(m["loss"])
     print(f"  [{tag}] params={n_params/1e6:.2f}M  loss {first:.3f} -> "
           f"{last:.3f}  ({time.time()-t0:.0f}s)")
-    return n_params, last
+    return n_params, last, params
 
 
 def main():
@@ -61,8 +61,8 @@ def main():
                                transforms=("identity", "shuffle",
                                            "transpose", "shuffle"),
                                shuffle_groups=8))
-    n0, l0 = train(base_cfg, "baseline")
-    n1, l1 = train(rb_cfg, "R&B 2x4 ")
+    n0, l0, _ = train(base_cfg, "baseline")
+    n1, l1, rb_params = train(rb_cfg, "R&B 2x4 ")
     # photonic cost of the transformer stack (per-block matmul shapes)
     d, f = base_cfg.d_model, base_cfg.d_ff
     shapes = [(d, d)] * 4 + [(d, f), (d, f), (f, d)]
@@ -77,6 +77,21 @@ def main():
     print(f"  photonic delay/pass:  {base_c.delay_ns/1e3:.0f} -> "
           f"{rb_c.delay_ns/1e3:.0f} us  (-{1 - rb_c.delay_ns / base_c.delay_ns:.0%})")
     print(f"  final loss:    {l0:.3f} (baseline) vs {l1:.3f} (R&B)")
+    # --- serve the trained R&B model through the compile-once Program ---
+    # Program.build programs the photonic weight banks ONCE (int8 tiles +
+    # TIA gains + W0-row checksums); every generated token then streams
+    # through the already-programmed banks — the paper's write-once /
+    # reuse-many discipline as an API.
+    from repro.api import Program
+    prog = Program.build(rb_cfg, rb_params, execution="photonic")
+    st = prog.bank_stats()
+    prompt = jnp.arange(8, dtype=jnp.int32)[None, :] + 3
+    out = prog.generate(prompt, max_new=8)
+    print(f"\n  Program (photonic): {st['programmed_tensors']} banks "
+          f"programmed once ({st['int8_bytes'] / 1e3:.0f} KB int8), "
+          f"bank checksum err {prog.verify_banks():.1e}")
+    print(f"  greedy continuation of {prompt[0].tolist()}: "
+          f"{out[0, 8:].tolist()}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ import numpy as np
 
 import jax
 
+from repro.api import Program
 from repro.configs import smoke_variant
 from repro.configs.base import ModelConfig
 from repro.core.prm import ReuseConfig
@@ -58,6 +59,9 @@ def main():
     args = ap.parse_args()
     cfg = smoke_variant(args.arch) if args.arch else small_lm()
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    # compile once: backend resolved + weight banks prepared, then every
+    # request below serves from the same Program
+    prog = Program.build(cfg, params)
 
     streamed: dict[int, int] = {}
 
@@ -70,7 +74,7 @@ def main():
               f"tail {comp.tokens[-8:].tolist()}")
 
     sched = ContinuousScheduler(
-        params, cfg, capacity=args.capacity,
+        prog, capacity=args.capacity,
         max_len=args.max_prompt + args.new_tokens,
         temperature=0.8, seed=7,
         on_token=on_token, on_complete=on_complete)

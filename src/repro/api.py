@@ -1,0 +1,299 @@
+"""Compile-once Program API — the public entry point for inference.
+
+The paper's discipline is *program the weight banks once, serve many steps*
+(§3.1).  ``Program`` is that discipline as an API:
+
+    prog = Program.build(cfg, params)            # resolve + prepare ONCE
+    logits, caches = prog.prefill(batch, cache_len)
+    logits, caches = prog.decode(tokens, caches, pos)
+    out = prog.generate(prompt, max_new=32)
+
+``build`` resolves the execution backend, casts the params to the compute
+dtype (subsuming ``engine.cast_params``), and — on the photonic backend —
+quantizes every matmul weight into a :class:`~repro.core.prepared.
+PreparedTensor` bank: int8 tiles, per-channel TIA gains for both OBU
+orientations, and the W0-row checksums, all derived exactly once.  Decode
+steps then skip the per-step weight re-quantization the legacy path paid
+(DESIGN.md §Prepared weights).
+
+**No retrace across Programs.**  The jitted cells live at module level and
+key their trace cache on static ``(cfg, backend, ...)`` — two Programs with
+the same config share compiled executables, and repeated ``generate`` calls
+never rebuild jit closures (the bug the legacy ``engine.generate`` had).
+``TRACE_COUNTS`` records actual retraces for tests.
+
+The old kwarg-threaded surface (``transformer.forward(execution=...)``,
+``engine.prefill_step/decode_step/generate``) stays alive as thin
+deprecation shims; greedy outputs are token-identical to the Program
+methods on both backends (tested in ``tests/test_program_api.py``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import backend as backend_lib
+from repro.core import prepared as prepared_lib
+from repro.models import transformer as tfm
+from repro.train.trainer import cross_entropy
+
+NEG_INF = -1e30
+
+# python-side trace counter: incremented only when a jitted cell actually
+# retraces (the function body runs under trace).  Tests assert stability.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@functools.lru_cache(maxsize=1)
+def _donate_caches() -> bool:
+    """Buffer donation frees the previous cache buffer the moment the
+    decode step consumes it (the carried KV pool updates in place).  CPU
+    has no donation support — skip it there to avoid per-call warnings.
+    Evaluated lazily (first Program step) so importing this module never
+    initializes the JAX runtime behind the caller's platform config."""
+    return jax.default_backend() != "cpu"
+
+
+# =========================================================================
+# sampling
+# =========================================================================
+def sample(logits, vocab_size: int, key=None, temperature: float = 0.0):
+    """Greedy (``temperature <= 0``) or temperature sampling over the
+    unpadded vocabulary.  ``temperature > 0`` REQUIRES a PRNG key — the
+    legacy silent fall-back to greedy is now an error."""
+    if temperature > 0.0 and key is None:
+        raise ValueError(
+            f"sample(temperature={temperature}) needs a PRNG key; pass "
+            f"key=jax.random.PRNGKey(...) or use temperature=0 for greedy")
+    logits = _mask_padded(logits.astype(jnp.float32), vocab_size)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def _mask_padded(logits, vocab_size: int):
+    padded = logits.shape[-1]
+    if padded == vocab_size:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, (padded,), 0)
+    return jnp.where(col < vocab_size, logits, NEG_INF)
+
+
+# =========================================================================
+# functional step builders (shared by Program, the engine shims, and the
+# dry-run lowering — which jits them itself with shardings)
+# =========================================================================
+def prefill_step_fn(cfg: ModelConfig, cache_len: int, *, act_pspec=None,
+                    execution=None):
+    """Pure ``fn(params, batch) -> (last_logits (B, V), caches)``."""
+    def fn(params, batch):
+        B = batch["tokens"].shape[0]
+        caches = tfm.init_caches(cfg, B, cache_len,
+                                 dtype=jnp.dtype(cfg.compute_dtype))
+        logits, caches, _ = tfm.forward(params, cfg, batch, mode="prefill",
+                                        caches=caches, act_pspec=act_pspec,
+                                        execution=execution)
+        return logits[:, -1, :], caches
+    return fn
+
+
+def decode_step_fn(cfg: ModelConfig, *, act_pspec=None, legacy_decode=False,
+                   execution=None):
+    """Pure ``fn(params, batch, caches, pos) -> (logits (B, V), caches)``."""
+    def fn(params, batch, caches, pos):
+        logits, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
+                                        caches=caches, pos=pos,
+                                        act_pspec=act_pspec,
+                                        legacy_decode=legacy_decode,
+                                        execution=execution)
+        return logits[:, 0, :], caches
+    return fn
+
+
+# =========================================================================
+# module-level jit cells (trace cache shared across all Programs)
+# =========================================================================
+@functools.partial(jax.jit, static_argnames=("cfg", "photonic"))
+def _prepare_cell(params, *, cfg: ModelConfig, photonic: bool):
+    TRACE_COUNTS["prepare"] += 1
+    return prepared_lib.prepare_params(params, cfg.compute_dtype, photonic)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "backend", "cache_len"))
+def _prefill_cell(bank, batch, last, *, cfg: ModelConfig, backend,
+                  cache_len: int):
+    """Prefill into fresh caches; returns each row's logits at its own
+    ``last`` index (right padding beyond it is causally invisible)."""
+    TRACE_COUNTS["prefill"] += 1
+    B = batch["tokens"].shape[0]
+    caches = tfm.init_caches(cfg, B, cache_len,
+                             dtype=jnp.dtype(cfg.compute_dtype))
+    logits, caches, _ = tfm.forward(bank, cfg, batch, mode="prefill",
+                                    caches=caches, execution=backend)
+    return logits[jnp.arange(B), last], caches
+
+
+@functools.lru_cache(maxsize=2)
+def _decode_cells(donate: bool):
+    """The two decode cells, jitted once per donation mode.  The lru_cache
+    hands every Program the same jitted objects, so the trace cache stays
+    shared process-wide exactly as with module-level cells."""
+    donate_args = (2,) if donate else ()
+
+    @functools.partial(jax.jit, static_argnames=("cfg", "backend"),
+                       donate_argnums=donate_args)
+    def decode_cell(bank, tokens, caches, pos, *, cfg: ModelConfig,
+                    backend):
+        TRACE_COUNTS["decode"] += 1
+        logits, caches, _ = tfm.forward(bank, cfg, {"tokens": tokens},
+                                        mode="decode", caches=caches,
+                                        pos=pos, execution=backend)
+        return logits[:, 0, :], caches
+
+    @functools.partial(jax.jit,
+                       static_argnames=("cfg", "backend", "greedy"),
+                       donate_argnums=donate_args)
+    def decode_sample_cell(bank, tokens, caches, pos, key, temperature, *,
+                           cfg: ModelConfig, backend, greedy: bool):
+        """Fused decode + sample: one jitted computation per token (the
+        sampler never round-trips logits through the host)."""
+        TRACE_COUNTS["decode_sample"] += 1
+        logits, caches, _ = tfm.forward(bank, cfg, {"tokens": tokens},
+                                        mode="decode", caches=caches,
+                                        pos=pos, execution=backend)
+        logits = _mask_padded(logits[:, 0, :].astype(jnp.float32),
+                              cfg.vocab_size)
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(key, logits / temperature,
+                                         axis=-1).astype(jnp.int32)
+        return tok, caches
+
+    return decode_cell, decode_sample_cell
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def _loss_cell(bank, batch, *, cfg: ModelConfig, backend):
+    TRACE_COUNTS["loss"] += 1
+    logits, _, aux = tfm.forward(bank, cfg, batch, mode="train",
+                                 execution=backend)
+    ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                       cfg.vocab_size)
+    return ce, aux
+
+
+# =========================================================================
+# Program
+# =========================================================================
+@dataclasses.dataclass
+class Program:
+    """A model compiled for serving: backend resolved, weights prepared,
+    step cells jitted — all exactly once, at :meth:`build` time."""
+
+    cfg: ModelConfig
+    backend: backend_lib.Backend
+    bank: Any                      # prepared params (PreparedTensor leaves
+                                   # on photonic; compute-dtype fp on xla)
+
+    # ------------------------------------------------------------ building
+    @classmethod
+    def build(cls, cfg: ModelConfig, params, *, execution=None) -> "Program":
+        """Resolve the substrate and prepare the weight banks once.
+
+        ``execution`` overrides ``cfg.execution`` ("xla" | "photonic" | a
+        ``Backend``); on photonic, every matmul weight is quantized to its
+        int8 bank here — no decode step ever re-derives W8 tiles."""
+        bk = backend_lib.resolve(execution if execution is not None else cfg)
+        bank = _prepare_cell(params, cfg=cfg, photonic=bk.is_photonic)
+        return cls(cfg=cfg, backend=bk, bank=bank)
+
+    # -------------------------------------------------------------- stats
+    def bank_stats(self) -> dict:
+        return prepared_lib.prepared_stats(self.bank)
+
+    def verify_banks(self) -> float:
+        """Max W0-row checksum error across all programmed banks (hardware
+        read-back verification; ~0 — below fp32 reduction noise ~1e-5 — for
+        uncorrupted banks, and exactly 0.0 for the pure-fp xla bank)."""
+        errs = [float(prepared_lib.verify_bank(leaf))
+                for leaf in jax.tree.leaves(
+                    self.bank,
+                    is_leaf=lambda x: isinstance(
+                        x, prepared_lib.PreparedTensor))
+                if isinstance(leaf, prepared_lib.PreparedTensor)]
+        return max(errs, default=0.0)
+
+    # -------------------------------------------------------------- steps
+    def prefill(self, batch, cache_len: int, last=None):
+        """Run prompts into fresh caches.  ``last`` (B,) selects each row's
+        last-prompt-token logits (default: the final column, for unpadded
+        prompts).  Returns (logits (B, V), caches)."""
+        B = batch["tokens"].shape[0]
+        if last is None:
+            last = jnp.full((B,), batch["tokens"].shape[1] - 1, jnp.int32)
+        return _prefill_cell(self.bank, batch, jnp.asarray(last, jnp.int32),
+                             cfg=self.cfg, backend=self.backend,
+                             cache_len=cache_len)
+
+    def decode(self, tokens, caches, pos):
+        """One token per sequence.  tokens: (B, 1); ``pos`` scalar (aligned)
+        or (B,) per-slot.  Cache buffers are donated (updated in place) on
+        accelerators — pass the returned caches to the next step."""
+        cell, _ = _decode_cells(_donate_caches())
+        return cell(self.bank, tokens, caches, pos, cfg=self.cfg,
+                    backend=self.backend)
+
+    def decode_sample(self, tokens, caches, pos, key=None,
+                      temperature: float = 0.0):
+        """Fused decode + sample step.  Returns (token_ids (B,), caches)."""
+        if temperature > 0.0 and key is None:
+            raise ValueError("decode_sample(temperature>0) needs a PRNG key")
+        if key is None:
+            key = jax.random.PRNGKey(0)          # unused under greedy
+        _, cell = _decode_cells(_donate_caches())
+        return cell(
+            self.bank, tokens, caches, pos, key,
+            jnp.float32(max(temperature, 1e-6)), cfg=self.cfg,
+            backend=self.backend, greedy=temperature <= 0.0)
+
+    def loss(self, batch):
+        """Mean next-token cross-entropy of ``batch`` (eval; no gradients).
+        Returns (ce, aux) scalars."""
+        return _loss_cell(self.bank, batch, cfg=self.cfg,
+                          backend=self.backend)
+
+    # ----------------------------------------------------------- generate
+    def generate(self, prompt, max_new: int, *, extras=None,
+                 temperature: float = 0.0, seed: int = 0):
+        """Host-side autoregressive loop over the pre-jitted cells.
+
+        prompt: (B, S) int32.  Returns (B, S + max_new).  Token-identical
+        to the legacy ``engine.generate`` (same key schedule)."""
+        prompt = jnp.asarray(prompt)
+        B, S = prompt.shape
+        cache_len = S + max_new
+        batch = {"tokens": prompt}
+        if extras:
+            batch.update(extras)
+        logits, caches = self.prefill(batch, cache_len)
+        key = jax.random.PRNGKey(seed)
+        toks = [prompt]
+        cur = sample(logits, self.cfg.vocab_size, key, temperature)[:, None]
+        for i in range(max_new):
+            toks.append(cur)
+            if i == max_new - 1:
+                break
+            key, sub = jax.random.split(key)
+            nxt, caches = self.decode_sample(cur, caches, S + i, key=sub,
+                                             temperature=temperature)
+            cur = nxt[:, None]
+        return jnp.concatenate(toks, axis=1)

@@ -9,10 +9,12 @@ backends implement the seam:
   * ``"xla"``      — ``obu.blend_dot`` dot_generals (fp accumulate; the
     transpose is a contraction-dim swap).  The default; bit-identical to the
     pre-backend code path.
-  * ``"photonic"`` — the Pallas W8A8 kernels (`kernels/ops.py`): quantize ->
-    offset-decomposed MVM (paper eq. 6) per matmul (weights re-quantize
-    inside each jitted step — see DESIGN.md §Execution backends "Known
-    cost" for the planned prepared-weights path); the OBU transpose is the
+  * ``"photonic"`` — the Pallas W8A8 kernels (`kernels/ops.py`): the
+    offset-decomposed MVM (paper eq. 6) per matmul, fed either from a
+    *prepared* bank (``core/prepared.py``, quantized once at
+    ``Program.build`` — the write-once path) or by quantizing the fp weight
+    in-step (legacy shims; see DESIGN.md §Execution backends "Prepared
+    weight banks"); the OBU transpose is the
     pre-swapped kernel variant (``photonic_mvm_t``, in-register tile swap);
     *blocked* OBU shuffles fold into the blend kernel's index-map epilogue;
     PRM-blended expert banks stream through the weight-stationary
@@ -28,6 +30,12 @@ Selection: ``ModelConfig.execution`` ("xla" | "photonic"), overridable
 per-call via the ``execution=`` kwarg on ``transformer.forward`` and the
 serve-engine steps (A/B without rebuilding configs).  ``resolve`` accepts a
 ``Backend``, a name, a config, or None (-> XLA).
+
+**Prepared banks** (DESIGN.md §Prepared weights): when a weight arrives as a
+``core.prepared.PreparedTensor`` — the ``Program.build`` bank, quantized
+once at build time — ``dot``/``reuse_dot`` route to ``dot_prepared``/
+``reuse_dot_prepared``, which skip the in-step W8 derivation entirely.  The
+prepared and in-step paths share one quantizer, so they are bit-identical.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import obu
+from repro.core.prepared import PreparedTensor
 from repro.kernels import ops
 
 EXECUTIONS = ("xla", "photonic")
@@ -62,7 +71,11 @@ class Backend:
     # ------------------------------------------------------------- matmuls
     def dot(self, x, w, *, transpose: bool = False):
         """``x @ w`` (w: (k, n)) or ``x @ w.T`` (w: (n, k)) — the weight
-        matmul primitive every layer routes through."""
+        matmul primitive every layer routes through.  ``w`` may be a raw fp
+        array (quantized in-step on the photonic backend) or a
+        ``PreparedTensor`` bank (quantized once at ``Program.build``)."""
+        if isinstance(w, PreparedTensor):
+            return self.dot_prepared(x, w, transpose=transpose)
         if not self.is_photonic:
             return obu.blend_dot(x, w, transpose=transpose)
         if transpose:
@@ -74,14 +87,55 @@ class Backend:
         return ops.photonic_matmul_kernel(x, w, bm=self.bm, bk=self.bk,
                                           bn=self.bn)
 
+    def dot_prepared(self, x, prep: PreparedTensor, *,
+                     transpose: bool = False):
+        """``dot`` against an already-programmed bank: no in-step weight
+        quantization.  The transposed orientation uses the bank's per-row
+        image (``wq_t``/``scale_t``) — the same array the optical transpose
+        illuminates from the orthogonal port."""
+        if not self.is_photonic:
+            # xla fallback: dequantize the programmed image (W8 numerics
+            # preserved) and run the dot_general path.  Only hit when an
+            # xla Backend is pointed at a photonic-prepared bank.
+            if transpose:
+                w = (prep.wq_t.astype(jnp.float32)
+                     * (prep.scale_t / 127.0)[..., :, None]).astype(x.dtype)
+            else:
+                w = (prep.wq.astype(jnp.float32)
+                     * (prep.scale / 127.0)[..., None, :]).astype(x.dtype)
+            return obu.blend_dot(x, w, transpose=transpose)
+        if transpose:
+            if prep.shape[-1] != x.shape[-1]:
+                raise ValueError(f"transpose blend needs square-compatible "
+                                 f"dims, got x{x.shape} w{prep.shape}")
+            return ops.photonic_matmul_prepared_t(
+                x, prep.wq_t, prep.scale_t, bm=self.bm, bk=self.bk,
+                bn=self.bn)
+        return ops.photonic_matmul_prepared(x, prep.wq, prep.scale,
+                                            bm=self.bm, bk=self.bk,
+                                            bn=self.bn)
+
     def reuse_dot(self, x_stack, w):
         """T independent activation streams through ONE weight: x_stack
         (T, ..., k) @ w (k, n).  Photonic: the weight is programmed once and
         stays VMEM-resident while the T streams pass (the write-once /
         reuse-T-times schedule as a kernel)."""
+        if isinstance(w, PreparedTensor):
+            return self.reuse_dot_prepared(x_stack, w)
         if not self.is_photonic:
             return obu.blend_dot(x_stack, w, transpose=False)
         return ops.reuse_resident_matmul(x_stack, w, bm=self.bm, bn=self.bn)
+
+    def reuse_dot_prepared(self, x_stack, prep: PreparedTensor):
+        """Reuse-resident matmul against a programmed bank (the fully
+        write-once form: neither the weight fetch nor its quantization
+        repeats across the T streams)."""
+        if not self.is_photonic:
+            w = (prep.wq.astype(jnp.float32)
+                 * (prep.scale / 127.0)[..., None, :]).astype(x_stack.dtype)
+            return obu.blend_dot(x_stack, w, transpose=False)
+        return ops.reuse_resident_matmul_prepared(
+            x_stack, prep.wq, prep.scale, bm=self.bm, bn=self.bn)
 
     # -------------------------------------------------------------- shuffle
     def shuffle(self, h, perm, block_perm=None, block: int = 0):

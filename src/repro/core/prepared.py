@@ -1,0 +1,220 @@
+"""Prepared photonic weight banks — write-once quantization at build time.
+
+The paper's whole premise is *program the MRR bank once, stream many
+activations through it* (§3.1).  The legacy photonic path violated that in
+software: ``Backend.dot`` re-derived W8 tiles + scales from the fp weights
+inside every jitted step (XLA CSEs repeats within a step, not across steps),
+an O(params) per-token tax the hardware pays once per calibration interval.
+
+``PreparedTensor`` is the software image of a *programmed* bank:
+
+  * ``wq``      int8 (..., K, N) — per-output-channel symmetric W8 tiles
+                (the MRR transmission pattern, pre-offset domain);
+  * ``scale``   f32  (..., N)    — per-output-channel TIA gains (``wmax``);
+  * ``wq_t``    int8 (..., K, N) — the same matrix re-quantized per ROW for
+                the OBU optical-transpose orientation (light on the
+                orthogonal port sees rows as output channels);
+  * ``scale_t`` f32  (..., K)    — per-row gains of the transposed use;
+  * ``w0_colsum`` f32 (..., N)   — the offset-decomposition column sums
+                ``sum_k W'[k, n]`` of the programmed bank in the MRR domain
+                (``W' = wq/(2*qmax) + 0.5``, paper eq. 6).  On hardware this
+                is the per-column summed transmission read back after
+                programming to verify the write; here it is the bank
+                checksum that ``verify_bank`` (and the conformance tests)
+                recompute against.
+
+The quantization helpers below are the *single source of truth*: the
+in-kernel path (`kernels/ops.py`) calls the same functions, so a bank
+prepared at build time is bit-identical to what the legacy per-step path
+would have derived — Program-vs-legacy outputs match exactly, not just
+within tolerance.
+
+Leading batch dims are free: a stacked segment's (R, K, N) weight — or a
+MoE bank's (R, E, K, N) — prepares each slice exactly as the per-call path
+would (the reductions run over the last two axes only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+# Crossbar-matmul weight leaves, by final pytree key.  Only these are
+# programmed into banks; everything else (norm scales, biases, SSM
+# A/D/dt, conv taps — including their PRM-stacked 2-D images) stays fp.
+# Deliberately NOT prepared despite being matmul-ish:
+#   table  — embedding gather needs the fp table (the tied lm-head matmul
+#            keeps the legacy in-kernel quantize path);
+#   router — MoE routing is fp32 + top-k on every backend;
+#   w_ukv  — MLA decode absorbs it into the latent einsums.
+MATMUL_LEAVES = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention projections
+    "w_gate", "w_up", "w_down",                  # MLPs + MoE expert banks
+    "w_dkv",                                     # MLA down-projection
+    "w_in", "w_out",                             # SSM in/out projections
+    "w",                                         # unembed / linear adapters
+})
+
+
+# =========================================================================
+# canonical W8 quantization (shared with kernels/ops.py — bitwise identical)
+# =========================================================================
+def quantize_weight(w: jax.Array, qmax: float = QMAX):
+    """Per-output-channel symmetric W8 of ``w`` (..., K, N).
+
+    Returns (wq int8 (..., K, N), scale f32 (..., N)).  Reductions run over
+    axis -2 only, so leading stack/bank dims quantize slice-wise exactly
+    like the per-call kernel path does."""
+    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=-2, keepdims=True), 1e-8)
+    w_norm = w / wmax
+    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
+    return wq, jnp.squeeze(wmax, axis=-2).astype(jnp.float32)
+
+
+def quantize_weight_t(w: jax.Array, qmax: float = QMAX):
+    """Per-ROW symmetric W8 of ``w`` (..., N, K) for the transposed use
+    (axis -2 is the output channel there).  Returns (wq_t int8 (..., N, K),
+    scale_t f32 (..., N))."""
+    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=-1), 1e-8)
+    w_norm = w / wmax[..., None]
+    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
+    return wq, wmax.astype(jnp.float32)
+
+
+def w0_column_sums(wq: jax.Array, qmax: float = QMAX) -> jax.Array:
+    """Offset-decomposition column sums of a programmed bank: per output
+    channel, ``sum_k W'[k, n]`` with ``W' = wq/(2*qmax) + 0.5`` (the MRR
+    transmission domain of paper eq. 6)."""
+    k = wq.shape[-2]
+    s = jnp.sum(wq.astype(jnp.float32), axis=-2)
+    return s / (2.0 * qmax) + 0.5 * k
+
+
+# =========================================================================
+# PreparedTensor
+# =========================================================================
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PreparedTensor:
+    """A weight matrix as a programmed photonic bank (int8 + gains).
+
+    Behaves enough like the fp array it replaced that the model layers need
+    no rewrite: ``.shape`` reports the logical (fp) shape, ``.astype`` is a
+    no-op (a programmed bank has no dtype to cast — readout gain handles
+    that), and ``x[i]`` slices every field's leading axis (MoE banks index
+    their basic-expert dimension; the PRM scan slices the R axis the same
+    way via the pytree protocol)."""
+
+    wq: jax.Array            # int8 (..., K, N), per-column quantized
+    scale: jax.Array         # f32  (..., N)
+    wq_t: jax.Array          # int8 (..., K, N), per-row quantized
+    scale_t: jax.Array       # f32  (..., K)
+    w0_colsum: jax.Array     # f32  (..., N) — programmed-bank checksum
+
+    # ---------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return ((self.wq, self.scale, self.wq_t, self.scale_t,
+                 self.w0_colsum), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ------------------------------------------------------- array-likeness
+    @property
+    def shape(self):
+        return self.wq.shape
+
+    @property
+    def ndim(self):
+        return self.wq.ndim
+
+    def astype(self, dtype):
+        """No-op: the bank is programmed; output dtype is set at readout
+        (the kernels cast after the TIA rescale)."""
+        return self
+
+    def __getitem__(self, idx):
+        return PreparedTensor(self.wq[idx], self.scale[idx], self.wq_t[idx],
+                              self.scale_t[idx], self.w0_colsum[idx])
+
+
+def is_prepared(w: Any) -> bool:
+    return isinstance(w, PreparedTensor)
+
+
+def prepare_tensor(w: jax.Array, qmax: float = QMAX) -> PreparedTensor:
+    """Program one fp weight (..., K, N) into a PreparedTensor — both
+    orientations plus the W0-row checksum."""
+    wq, scale = quantize_weight(w, qmax)
+    wq_t, scale_t = quantize_weight_t(w, qmax)
+    return PreparedTensor(wq=wq, scale=scale, wq_t=wq_t, scale_t=scale_t,
+                          w0_colsum=w0_column_sums(wq, qmax))
+
+
+def verify_bank(prep: PreparedTensor, qmax: float = QMAX) -> jax.Array:
+    """Max |recomputed − stored| W0-row checksum error of a programmed bank
+    (the hardware read-back verification; ~0 for an uncorrupted bank, up to
+    fp32 reduction-order noise ~1e-5; a corrupted int8 tile shifts a column
+    sum by >= 1/(2*qmax) ~ 4e-3)."""
+    return jnp.max(jnp.abs(w0_column_sums(prep.wq, qmax) - prep.w0_colsum))
+
+
+# =========================================================================
+# whole-params preparation
+# =========================================================================
+def _eligible(path, leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    last = None
+    for k in reversed(path):
+        key = getattr(k, "key", None)
+        if isinstance(key, str):
+            last = key
+            break
+    return last in MATMUL_LEAVES
+
+
+def prepare_params(params: Any, compute_dtype, photonic: bool) -> Any:
+    """Build the prepared bank for a whole model.
+
+    Every leaf is first cast fp32 -> ``compute_dtype`` (subsuming
+    ``engine.cast_params``).  With ``photonic=True``, every crossbar matmul
+    weight (:data:`MATMUL_LEAVES`) is then programmed into a
+    :class:`PreparedTensor`; everything else stays floating point.
+
+    The cast-then-quantize order matches the legacy in-step path exactly
+    (layers cast ``p["w"].astype(x.dtype)`` before ``Backend.dot``), so the
+    bank is bit-identical to what each step would have derived."""
+    dtype = jnp.dtype(compute_dtype)
+
+    def one(path, leaf):
+        if hasattr(leaf, "dtype") and leaf.dtype == jnp.float32:
+            leaf = leaf.astype(dtype)
+        if photonic and _eligible(path, leaf):
+            return prepare_tensor(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def prepared_stats(bank: Any) -> dict:
+    """Bank accounting: programmed tensors / int8 bytes / fp leaves."""
+    n_prog = 0
+    int8_bytes = 0
+    fp_bytes = 0
+    for leaf in jax.tree.leaves(
+            bank, is_leaf=lambda x: isinstance(x, PreparedTensor)):
+        if isinstance(leaf, PreparedTensor):
+            n_prog += 1
+            int8_bytes += leaf.wq.size + leaf.wq_t.size
+        elif hasattr(leaf, "nbytes"):
+            fp_bytes += leaf.nbytes
+    return {"programmed_tensors": n_prog, "int8_bytes": int8_bytes,
+            "fp_bytes": fp_bytes}

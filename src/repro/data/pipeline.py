@@ -15,8 +15,6 @@ Two synthetic tasks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import numpy as np
 
 import jax

@@ -3,13 +3,26 @@
 On CPU (this container) the kernels execute with ``interpret=True``; on a
 real TPU backend they lower natively.  All shape plumbing (quantization,
 padding, head flattening) lives here so callers stay tensor-shaped.
+
+Two families of matmul entry points:
+
+  * ``photonic_matmul_kernel`` / ``_t`` / ``reuse_resident_matmul`` — the
+    legacy self-contained path: quantize the fp weight in-step, then run the
+    offset-decomposed MVM.  Weight quantization is re-derived inside every
+    jitted step (the per-token tax DESIGN.md §Prepared weights removes).
+  * ``photonic_matmul_prepared`` / ``_prepared_t`` / ``reuse_resident_
+    matmul_prepared`` — the write-once path: take a *prepared* (int8,
+    scale) bank (`core/prepared.py`, built once by ``Program.build``) and
+    skip straight to the kernel.  Both families share the same quantizers
+    (`core.prepared.quantize_weight*`), so prepared and in-step execution
+    are bit-identical.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.photonic import normalize_weights, quantize_symmetric
+from repro.core.photonic import quantize_symmetric
+from repro.core.prepared import quantize_weight, quantize_weight_t
 from repro.kernels import blend as _blend
 from repro.kernels import flash_attention as _fa
 from repro.kernels import photonic_mvm as _pm
@@ -20,18 +33,13 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# =========================================================================
+# in-step quantize path (legacy)
+# =========================================================================
 def photonic_matmul_kernel(x, w, *, bm=128, bk=128, bn=128):
     """Full photonic W8A8 path: quantize -> offset-decomposed Pallas MVM."""
-    qmax = 127.0
-    w_norm, wmax = normalize_weights(w)
-    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
-    xq, xscale = quantize_symmetric(x, 8)
-    lead = x.shape[:-1]
-    x2 = xq.reshape(-1, x.shape[-1])
-    y = _pm.photonic_mvm(x2, wq, xscale, wmax.reshape(-1),
-                         bm=bm, bk=bk, bn=bn, qmax=qmax,
-                         interpret=_interpret())
-    return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+    wq, wscale = quantize_weight(w)
+    return photonic_matmul_prepared(x, wq, wscale, bm=bm, bk=bk, bn=bn)
 
 
 def photonic_matmul_kernel_t(x, w, *, bm=128, bk=128, bn=128):
@@ -41,17 +49,8 @@ def photonic_matmul_kernel_t(x, w, *, bm=128, bk=128, bn=128):
 
     Per-output-channel weight scales run along w's ROWS here (axis 0 is the
     output channel of the transposed use)."""
-    qmax = 127.0
-    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)       # (n,)
-    w_norm = w / wmax[:, None]
-    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
-    xq, xscale = quantize_symmetric(x, 8)
-    lead = x.shape[:-1]
-    x2 = xq.reshape(-1, x.shape[-1])
-    y = _pm.photonic_mvm_t(x2, wq, xscale, wmax,
-                           bm=bm, bk=bk, bn=bn, qmax=qmax,
-                           interpret=_interpret())
-    return y.reshape(*lead, w.shape[0]).astype(x.dtype)
+    wq, wscale = quantize_weight_t(w)
+    return photonic_matmul_prepared_t(x, wq, wscale, bm=bm, bk=bk, bn=bn)
 
 
 def reuse_resident_matmul(x_stack, w, *, bm=128, bn=128):
@@ -62,19 +61,54 @@ def reuse_resident_matmul(x_stack, w, *, bm=128, bn=128):
     and stays VMEM-resident while all T streams pass through it
     (kernels/photonic_mvm.photonic_mvm_resident); activations get per-step
     A8 scales.  Returns (T, ..., n)."""
-    qmax = 127.0
-    w_norm, wmax = normalize_weights(w)
-    wq = jnp.clip(jnp.round(w_norm * qmax), -qmax - 1, qmax).astype(jnp.int8)
+    wq, wscale = quantize_weight(w)
+    return reuse_resident_matmul_prepared(x_stack, wq, wscale, bm=bm, bn=bn)
+
+
+# =========================================================================
+# prepared-bank path (write-once)
+# =========================================================================
+def photonic_matmul_prepared(x, wq, wscale, *, bm=128, bk=128, bn=128,
+                             qmax=127.0):
+    """Offset-decomposed MVM against an already-programmed bank.
+
+    wq: int8 (k, n) per-output-channel quantized; wscale: f32 (n,).  Only
+    the activations are quantized here — the weight-side work (normalize,
+    round, scale derivation) happened once at ``Program.build`` time."""
+    xq, xscale = quantize_symmetric(x, 8)
+    lead = x.shape[:-1]
+    x2 = xq.reshape(-1, x.shape[-1])
+    y = _pm.photonic_mvm(x2, wq, xscale, wscale.reshape(-1),
+                         bm=bm, bk=bk, bn=bn, qmax=qmax,
+                         interpret=_interpret())
+    return y.reshape(*lead, wq.shape[1]).astype(x.dtype)
+
+
+def photonic_matmul_prepared_t(x, wq, wscale, *, bm=128, bk=128, bn=128,
+                               qmax=127.0):
+    """Prepared ``x @ w.T``: wq int8 (n, k) per-ROW quantized; wscale (n,)."""
+    xq, xscale = quantize_symmetric(x, 8)
+    lead = x.shape[:-1]
+    x2 = xq.reshape(-1, x.shape[-1])
+    y = _pm.photonic_mvm_t(x2, wq, xscale, wscale,
+                           bm=bm, bk=bk, bn=bn, qmax=qmax,
+                           interpret=_interpret())
+    return y.reshape(*lead, wq.shape[0]).astype(x.dtype)
+
+
+def reuse_resident_matmul_prepared(x_stack, wq, wscale, *, bm=128, bn=128,
+                                   qmax=127.0):
+    """Prepared reuse-resident MVM: T streams through one programmed bank."""
     T = x_stack.shape[0]
     lead = x_stack.shape[1:-1]
     K = x_stack.shape[-1]
     x2 = x_stack.reshape(T, -1, K)
     xq, xscale = quantize_symmetric(x2, 8, axis=(1, 2))          # (T,1,1)
     y = _pm.photonic_mvm_resident(xq, wq, xscale.reshape(T),
-                                  wmax.reshape(-1),
+                                  wscale.reshape(-1),
                                   bm=min(bm, max(1, x2.shape[1])), bn=bn,
                                   qmax=qmax, interpret=_interpret())
-    return y.reshape(T, *lead, w.shape[1]).astype(x_stack.dtype)
+    return y.reshape(T, *lead, wq.shape[1]).astype(x_stack.dtype)
 
 
 def blend_shuffle(x, bias, block_perm, *, block=128, activation="relu"):

@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

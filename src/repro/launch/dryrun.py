@@ -20,7 +20,6 @@ Usage:
 
 import argparse  # noqa: E402  (XLA_FLAGS must precede all jax imports)
 import dataclasses
-import functools
 import json
 import re
 import sys
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import api
 from repro.configs import (SHAPES, get_arch, input_specs, shape_supported)
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.core.costmodel import V5E, roofline_terms
@@ -38,7 +38,6 @@ from repro.launch import analysis
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as tfm
 from repro.optim import adamw
-from repro.serve import engine
 from repro.sharding import partition
 from repro.train import trainer
 
@@ -224,10 +223,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
             c_shard = partition.cache_shardings(cfg, mesh,
                                                 shape.global_batch,
                                                 shape.seq_len)
-            fn = functools.partial(engine.prefill_step, cfg=cfg,
-                                   cache_len=shape.seq_len,
-                                   act_pspec=apspec)
-            jitted = jax.jit(lambda p, b: fn(p, batch=b),
+            # the Program API's functional prefill (the same step
+            # ``Program.prefill`` jits), lowered here with shardings
+            fn = api.prefill_step_fn(cfg, shape.seq_len, act_pspec=apspec)
+            jitted = jax.jit(fn,
                              in_shardings=(bf16_shard, bsh),
                              out_shardings=(None, c_shard))
             lowered = jitted.lower(bf16_params, ispec["batch"])
@@ -239,11 +238,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
             c_shard = partition.cache_shardings(cfg, mesh,
                                                 shape.global_batch,
                                                 shape.seq_len)
-            fn = functools.partial(engine.decode_step, cfg=cfg,
-                                   act_pspec=None,
-                                   legacy_decode=legacy_decode)
+            fn = api.decode_step_fn(cfg, act_pspec=None,
+                                    legacy_decode=legacy_decode)
             jitted = jax.jit(
-                lambda p, b, c, pos: fn(p, batch=b, caches=c, pos=pos),
+                fn,
                 in_shardings=(p_shard, bsh, c_shard,
                               partition.replicated(mesh)),
                 out_shardings=(None, c_shard),

@@ -1,4 +1,8 @@
-"""Serving driver: continuous-batching scheduler over the PRM-shared caches.
+"""Serving driver: compile-once Program + continuous-batching scheduler.
+
+The model is built into ONE :class:`repro.api.Program` (backend resolved,
+photonic weight banks prepared at build time) and every scheduler serves
+from it — no per-request backend resolution or weight re-quantization.
 
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \\
@@ -7,7 +11,8 @@ CPU-scale example:
 ``--scheduler`` picks the serving path:
   continuous  slot-level continuous batching (default; serve/scheduler.py)
   wave        static aligned waves (fallback; serve/batcher.py)
-  engine      one aligned batch straight through engine.generate
+  engine      one aligned batch straight through Program.generate
+``--execution`` picks the matmul substrate (xla | photonic).
 """
 from __future__ import annotations
 
@@ -19,9 +24,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import Program
 from repro.configs import get_arch, smoke_variant
 from repro.models import transformer as tfm
-from repro.serve import engine
 from repro.serve.batcher import Request, WaveBatcher
 from repro.serve.scheduler import ContinuousScheduler
 
@@ -66,10 +71,20 @@ def main(argv=None):
     ap.add_argument("--max-prompt", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--execution", default=None,
+                    choices=["xla", "photonic"],
+                    help="matmul substrate override (default: cfg.execution)")
     args = ap.parse_args(argv)
     cfg = smoke_variant(args.arch) if args.smoke else get_arch(
         args.arch, reuse=args.reuse)
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    # compile once: backend + (photonic) prepared weight banks
+    prog = Program.build(cfg, params, execution=args.execution)
+    if prog.backend.is_photonic:
+        st = prog.bank_stats()
+        print(f"[serve] photonic banks prepared once: "
+              f"{st['programmed_tensors']} tensors, "
+              f"{st['int8_bytes'] / 1e6:.2f} MB int8")
 
     if args.scheduler == "engine":
         prompt = jax.random.randint(jax.random.PRNGKey(1),
@@ -80,8 +95,8 @@ def main(argv=None):
             extras = {k: jnp.repeat(v, args.capacity, axis=0)
                       for k, v in extras.items()}
         t0 = time.time()
-        out = engine.generate(params, cfg, prompt, args.new_tokens,
-                              extras=extras, temperature=args.temperature)
+        out = prog.generate(prompt, args.new_tokens, extras=extras,
+                            temperature=args.temperature)
         dt = time.time() - t0
         n_new = args.capacity * args.new_tokens
         print(f"[serve/engine] {cfg.name}: {n_new} tokens in {dt:.2f}s "
@@ -91,11 +106,11 @@ def main(argv=None):
 
     reqs = _make_trace(cfg, args.requests, args.max_prompt, args.new_tokens)
     if args.scheduler == "wave":
-        sched = WaveBatcher(params, cfg, wave_size=args.capacity,
+        sched = WaveBatcher(prog, wave_size=args.capacity,
                             temperature=args.temperature)
     else:
         sched = ContinuousScheduler(
-            params, cfg, capacity=args.capacity,
+            prog, capacity=args.capacity,
             max_len=args.max_prompt + args.new_tokens,
             temperature=args.temperature)
     for r in reqs:

@@ -16,17 +16,13 @@ Usage (CPU-scale example):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 import signal
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_arch, smoke_variant
+from repro.configs import get_arch, smoke_variant
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.launch import mesh as mesh_lib
@@ -142,10 +138,20 @@ def main(argv=None):
                        warmup_steps=max(1, args.steps // 10),
                        checkpoint_every=args.ckpt_every,
                        checkpoint_dir=args.ckpt_dir)
-    _, _, losses = run(cfg, tcfg, batch=args.batch, seq=args.seq,
-                       steps=args.steps, task=args.task,
-                       resume=not args.no_resume)
+    params, _, losses = run(cfg, tcfg, batch=args.batch, seq=args.seq,
+                            steps=args.steps, task=args.task,
+                            resume=not args.no_resume)
     print(f"[train] done. loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    # held-out eval through the compile-once serving surface: the trained
+    # params become a Program (backend resolved, banks prepared once)
+    from repro.api import Program
+    prog = Program.build(cfg, params)
+    pipe = SyntheticPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=args.seq,
+                                        global_batch=args.batch,
+                                        task=args.task, seed=tcfg.seed + 1))
+    ce, _ = prog.loss(pipe.device_batch(10_000))
+    print(f"[train] held-out eval via Program.loss: ce {float(ce):.4f}")
 
 
 if __name__ == "__main__":

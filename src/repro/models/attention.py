@@ -13,8 +13,6 @@ angles are per-slot in the vector case.  Softmax is always fp32.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

@@ -8,6 +8,12 @@ Weight matmuls route through the execution backend (``core/backend.py``):
 "xla" lowers to ``obu.blend_dot`` dot_generals (the OBU "optical transpose"
 is a dimension swap, never a materialized transpose); "photonic" routes the
 same calls through the Pallas W8A8 kernels.
+
+A matmul weight may arrive as a raw fp array or as a *prepared bank*
+(``core.prepared.PreparedTensor`` — ``Program.build``'s write-once int8
+image).  The layers are agnostic: ``PreparedTensor.astype`` is a no-op (a
+programmed bank has no dtype; readout gain casts) and ``Backend.dot``
+dispatches on the leaf type, so the same layer code serves both.
 """
 from __future__ import annotations
 

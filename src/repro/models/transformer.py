@@ -368,6 +368,11 @@ def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
     caches: pytree {segment: [R, T, {...}]} (prefill output / decode in-out).
     execution: overrides ``cfg.execution`` ("xla" | "photonic" | Backend);
       None uses the config's backend (core/backend.py).
+    params may be raw fp weights (photonic: W8 derived in-step — the legacy
+      shim path) or a ``Program.build`` bank whose matmul leaves are
+      prepared ``core.prepared.PreparedTensor`` banks (write-once; the
+      layers dispatch transparently).  New code should call this through
+      :class:`repro.api.Program` rather than threading kwargs per call.
     Returns (logits, new_caches, aux).
     """
     dtype = jnp.dtype(cfg.compute_dtype)

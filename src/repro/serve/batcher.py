@@ -15,15 +15,14 @@ which decodes with per-slot positions over a ``serve.slots.SlotPool``
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.base import ModelConfig
-from repro.serve import engine
 
 
 @dataclasses.dataclass
@@ -71,9 +70,18 @@ class WaveStats:
 class WaveBatcher:
     """Admit requests, emit completions wave by wave."""
 
-    def __init__(self, params, cfg: ModelConfig, wave_size: int = 8,
+    def __init__(self, params, cfg: ModelConfig = None, wave_size: int = 8,
                  pad_id: int = 0, temperature: float = 0.0):
-        self.params = engine.cast_params(params, cfg)
+        # accepts a prebuilt ``api.Program`` (compile-once entry) or the
+        # legacy (params, cfg) pair
+        if isinstance(params, api.Program):
+            self.program = params
+            cfg = params.cfg
+        else:
+            if cfg is None:
+                raise ValueError("WaveBatcher(params, cfg) needs the model "
+                                 "config (or pass a prebuilt Program)")
+            self.program = api.Program.build(cfg, params)
         self.cfg = cfg
         self.wave_size = wave_size
         self.pad_id = pad_id
@@ -121,9 +129,9 @@ class WaveBatcher:
             # aligned decode then starts all slots together)
             prompts[i, max_prompt - len(r.prompt):] = r.prompt
         extras = wave[0].extras      # every wave member matches (_form_wave)
-        out = engine.generate(self.params, self.cfg, jnp.asarray(prompts),
-                              max_new, extras=extras,
-                              temperature=self.temperature)
+        out = self.program.generate(jnp.asarray(prompts), max_new,
+                                    extras=extras,
+                                    temperature=self.temperature)
         out = np.asarray(out)
         comps = []
         for i, r in enumerate(wave):

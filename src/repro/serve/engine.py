@@ -1,21 +1,31 @@
-"""Serving engine: prefill + batched decode over the PRM-stacked caches.
+"""Serving engine — legacy kwarg-threaded surface over the Program API.
 
-``prefill_step`` and ``decode_step`` are the functions the dry-run lowers for
-the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells; ``generate`` is
-the host loop used by the examples.
+.. deprecated::
+    New code should use :class:`repro.api.Program` directly::
+
+        prog = Program.build(cfg, params)        # backend + banks, once
+        out = prog.generate(prompt, max_new=32)
+
+    The functions here are thin shims kept for the old call sites (and the
+    dry-run's sharded lowering): ``prefill_step``/``decode_step`` wrap the
+    functional builders in ``repro.api``, and ``generate`` builds a
+    throwaway ``Program`` per call — the jit cells live at module level in
+    ``repro.api``, so even the throwaway Program reuses the shared trace
+    cache (the legacy per-call ``jax.jit`` closure rebuild is gone).
+    Greedy outputs are token-identical to the Program methods on both
+    backends (``tests/test_program_api.py``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.base import ModelConfig
-from repro.models import transformer as tfm
-
-NEG_INF = -1e30
 
 
 def cast_params(params, cfg: ModelConfig):
+    """fp32 -> compute-dtype cast (subsumed by ``Program.build``)."""
     return jax.tree.map(
         lambda p: p.astype(cfg.compute_dtype)
         if p.dtype == jnp.float32 else p, params)
@@ -27,14 +37,13 @@ def prefill_step(params, cfg: ModelConfig, batch, cache_len: int,
 
     ``execution`` overrides ``cfg.execution`` ("xla" | "photonic") — the
     serving A/B knob for the matmul substrate (core/backend.py).
-    Returns (last_token_logits (B, V), caches)."""
-    B = batch["tokens"].shape[0]
-    caches = tfm.init_caches(cfg, B, cache_len,
-                             dtype=jnp.dtype(cfg.compute_dtype))
-    logits, caches, _ = tfm.forward(params, cfg, batch, mode="prefill",
-                                    caches=caches, act_pspec=act_pspec,
-                                    execution=execution)
-    return logits[:, -1, :], caches
+    Returns (last_token_logits (B, V), caches).
+
+    Deprecated shim: prefer ``Program.build(cfg, params).prefill(...)``
+    (prepared weight banks, pre-jitted cells)."""
+    fn = api.prefill_step_fn(cfg, cache_len, act_pspec=act_pspec,
+                             execution=execution)
+    return fn(params, batch)
 
 
 def decode_step(params, cfg: ModelConfig, batch, caches, pos,
@@ -42,29 +51,21 @@ def decode_step(params, cfg: ModelConfig, batch, caches, pos,
     """One token for every sequence in the batch. batch["tokens"]: (B, 1).
 
     ``pos`` is a scalar (aligned decode) or a (B,) per-slot position vector
-    (continuous batching — each row masks and RoPEs at its own position)."""
-    logits, caches, _ = tfm.forward(params, cfg, batch, mode="decode",
-                                    caches=caches, pos=pos,
-                                    act_pspec=act_pspec,
-                                    legacy_decode=legacy_decode,
-                                    execution=execution)
-    return logits[:, 0, :], caches
+    (continuous batching — each row masks and RoPEs at its own position).
 
-
-def _mask_padded(logits, vocab_size: int):
-    padded = logits.shape[-1]
-    if padded == vocab_size:
-        return logits
-    col = jax.lax.broadcasted_iota(jnp.int32, (padded,), 0)
-    return jnp.where(col < vocab_size, logits, NEG_INF)
+    Deprecated shim: prefer ``Program.decode`` — on the photonic backend it
+    skips the per-step weight re-quantization this path pays."""
+    fn = api.decode_step_fn(cfg, act_pspec=act_pspec,
+                            legacy_decode=legacy_decode, execution=execution)
+    return fn(params, batch, caches, pos)
 
 
 def sample(logits, vocab_size: int, key=None, temperature: float = 0.0):
-    logits = _mask_padded(logits.astype(jnp.float32), vocab_size)
-    if temperature <= 0.0 or key is None:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature,
-                                  axis=-1).astype(jnp.int32)
+    """Greedy / temperature sampling (see ``repro.api.sample``).
+
+    ``temperature > 0`` without a key now raises instead of silently
+    falling back to greedy."""
+    return api.sample(logits, vocab_size, key=key, temperature=temperature)
 
 
 def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
@@ -72,35 +73,11 @@ def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
              execution=None):
     """Host-side autoregressive loop (examples / tests).
 
-    prompt: (B, S) int32.  Returns (B, S + max_new)."""
-    params = cast_params(params, cfg)
-    B, S = prompt.shape
-    cache_len = S + max_new
-    batch = {"tokens": prompt}
-    if extras:
-        batch.update(extras)
-    # prefill and decode+sample each run as ONE jitted computation: the
-    # sampler fuses with the model step instead of round-tripping logits
-    pf = jax.jit(lambda p, b: prefill_step(p, cfg, b, cache_len,
-                                           execution=execution))
+    prompt: (B, S) int32.  Returns (B, S + max_new).
 
-    @jax.jit
-    def dec(p, b, c, pos, key):
-        logits, c = decode_step(p, cfg, b, c, pos, execution=execution)
-        return sample(logits, cfg.vocab_size, key, temperature), c
-
-    logits, caches = pf(params, batch)
-    key = jax.random.PRNGKey(seed)
-    toks = [prompt]
-    cur = sample(logits, cfg.vocab_size, key, temperature)[:, None]
-    for i in range(max_new):
-        toks.append(cur)
-        if i == max_new - 1:
-            break
-        b = {"tokens": cur}
-        if extras:
-            b.update(extras)
-        key, sub = jax.random.split(key)
-        nxt, caches = dec(params, b, caches, S + i, sub)
-        cur = nxt[:, None]
-    return jnp.concatenate(toks, axis=1)
+    Deprecated shim over ``Program.generate``: builds the Program (backend
+    resolution + prepared banks) per call, then serves every token from the
+    pre-jitted module-level cells — no per-call jit-closure rebuild."""
+    prog = api.Program.build(cfg, params, execution=execution)
+    return prog.generate(prompt, max_new, extras=extras,
+                         temperature=temperature, seed=seed)

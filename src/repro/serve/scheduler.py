@@ -31,11 +31,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.base import ModelConfig
 from repro.core import costmodel
 from repro.core.prm import ReusePlan
 from repro.models import transformer as tfm
-from repro.serve import engine
 from repro.serve.batcher import Completion, Request
 from repro.serve.slots import SlotPool, SlotState
 
@@ -143,20 +143,38 @@ class ContinuousStats:
 class ContinuousScheduler:
     """Slot-level continuous batching over a shared [R, T, B, L, ...] pool.
 
-    Greedy outputs are token-identical to ``engine.generate`` run per
+    Serves from a compile-once :class:`repro.api.Program` (pass one as the
+    first argument to share its prepared banks and jit cells across
+    schedulers, or the legacy ``(params, cfg)`` pair to build one here).
+    Greedy outputs are token-identical to ``Program.generate`` run per
     request: prompts are left-aligned at position 0 of their slot, prefill
     pads only to a compile bucket on the *right* (causally invisible), and
     decode masks every row at its own position.
     """
 
-    def __init__(self, params, cfg: ModelConfig, *, capacity: int = 8,
+    def __init__(self, params, cfg: Optional[ModelConfig] = None, *,
+                 capacity: int = 8,
                  max_len: int = 256, pad_id: int = 0,
                  temperature: float = 0.0, seed: int = 0,
                  prefill_bucket: int = 16,
                  admission: Optional[ReuseAwareAdmission] = None,
                  on_token: Optional[Callable[[int, int], None]] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None):
-        self.params = engine.cast_params(params, cfg)
+        # compile-once entry: pass a prebuilt ``api.Program`` as the first
+        # argument (backend + prepared banks resolved exactly once, shared
+        # with other schedulers); or the legacy (params, cfg) pair, which
+        # builds the Program here.
+        if isinstance(params, api.Program):
+            self.program = params
+            if cfg is not None and cfg != params.cfg:
+                raise ValueError("pass either a Program or (params, cfg), "
+                                 "not a Program plus a different cfg")
+            cfg = self.program.cfg
+        else:
+            if cfg is None:
+                raise ValueError("ContinuousScheduler(params, cfg) needs "
+                                 "the model config")
+            self.program = api.Program.build(cfg, params)
         self.cfg = cfg
         self.pad_id = pad_id
         self.temperature = temperature
@@ -177,39 +195,6 @@ class ContinuousScheduler:
         self.key = jax.random.PRNGKey(seed)
         # current (unprocessed) token per slot, fed to the next decode step
         self._cur = np.full((capacity, 1), pad_id, np.int32)
-        self._pf_cache: dict = {}
-        self._dec = self._build_decode()
-
-    # ------------------------------------------------------------ jit cells
-    def _build_decode(self):
-        cfg, temp = self.cfg, self.temperature
-
-        @jax.jit
-        def dec(p, toks, caches, pos, key):
-            logits, caches = engine.decode_step(p, cfg, {"tokens": toks},
-                                                caches, pos)
-            return engine.sample(logits, cfg.vocab_size, key, temp), caches
-
-        return dec
-
-    def _prefill_fn(self, bucket: int):
-        """One jitted prefill per compile bucket (attention-only models
-        round the prompt length up — right-padding is masked out, so
-        results stay exact; SSM models pass exact lengths, see _bucket)."""
-        fn = self._pf_cache.get(bucket)
-        if fn is None:
-            cfg = self.cfg
-            dtype = jnp.dtype(cfg.compute_dtype)
-
-            def pf(p, batch, last):
-                caches = tfm.init_caches(cfg, batch["tokens"].shape[0],
-                                         bucket, dtype=dtype)
-                logits, caches, _ = tfm.forward(p, cfg, batch,
-                                                mode="prefill", caches=caches)
-                return logits[jnp.arange(logits.shape[0]), last], caches
-
-            fn = self._pf_cache[bucket] = jax.jit(pf)
-        return fn
 
     # ------------------------------------------------------------ interface
     def submit(self, req: Request) -> None:
@@ -269,13 +254,14 @@ class ContinuousScheduler:
         batch = {"tokens": jnp.asarray(toks)}
         if req.extras:
             batch.update(req.extras)
-        pf = self._prefill_fn(bucket)
-        logits, caches = pf(self.params, batch,
-                            jnp.asarray([plen - 1], jnp.int32))
+        # one jitted prefill per compile bucket — the cell cache is keyed on
+        # the static cache_len, shared across schedulers via repro.api
+        logits, caches = self.program.prefill(
+            batch, bucket, last=jnp.asarray([plen - 1], jnp.int32))
         self.pool.write_prefill(slot, caches, plen)
-        tok = int(np.asarray(engine.sample(logits, self.cfg.vocab_size,
-                                           self._next_key(),
-                                           self.temperature))[0])
+        tok = int(np.asarray(api.sample(logits, self.cfg.vocab_size,
+                                        self._next_key(),
+                                        self.temperature))[0])
         self._cur[slot, 0] = tok
         self.stats.requests += 1
         self.stats.prefills += 1
@@ -310,9 +296,10 @@ class ContinuousScheduler:
 
     def _decode_once(self) -> list[Completion]:
         active = self.pool.active_slots()
-        nxt, self.pool.caches = self._dec(
-            self.params, jnp.asarray(self._cur), self.pool.caches,
-            self.pool.position_vector(), self._next_key())
+        nxt, self.pool.caches = self.program.decode_sample(
+            jnp.asarray(self._cur), self.pool.caches,
+            self.pool.position_vector(), key=self._next_key(),
+            temperature=self.temperature)
         nxt = np.asarray(nxt)
         self.stats.decode_steps += 1
         self.stats.slot_steps += self.pool.capacity

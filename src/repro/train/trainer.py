@@ -6,9 +6,6 @@ here must be shape-static and SPMD-cleanly shardable.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -8,7 +8,8 @@ pytest does not mistake them for fixtures).
 import pytest
 
 try:
-    from hypothesis import given, settings
+    # redundant aliases mark the deliberate re-exports (ruff F401)
+    from hypothesis import given as given, settings as settings
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:

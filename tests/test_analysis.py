@@ -1,7 +1,6 @@
 """Unit tests for the dry-run HLO analysis (trip-corrected accounting)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import analysis
@@ -47,7 +46,6 @@ def test_hbm_traffic_scales_with_trip_count():
 
 def test_collectives_counted_inside_scan_body():
     """A psum inside a scan body must be multiplied by the trip count."""
-    import os
     if jax.device_count() < 2:
         pytest.skip("needs >1 device (run under dryrun env)")
 

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCHS, RB_PLANS, get_arch, rb, smoke_variant
+from repro.configs import ARCHS, get_arch, rb, smoke_variant
 from repro.models import transformer as tfm
 
 

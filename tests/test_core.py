@@ -7,7 +7,7 @@ import pytest
 from _optional_hypothesis import given, settings, st
 
 from repro.core import costmodel, obu, photonic
-from repro.core.prm import ReuseConfig, ReusePlan, no_reuse
+from repro.core.prm import ReuseConfig, ReusePlan
 
 
 # ======================================================================

@@ -1,11 +1,8 @@
 """Beyond-paper feature: PRM across the MoE expert dimension — E logical
 experts blended from R_e basic experts via static OBU gate shuffles."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.models import moe as moe_lib

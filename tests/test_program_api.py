@@ -1,0 +1,293 @@
+"""Compile-once Program API (repro/api.py) + prepared weight banks.
+
+Covers the ISSUE-3 contract:
+  * deprecation shims (``engine.prefill_step/decode_step/generate``,
+    ``forward(execution=)``) are token-identical to the equivalent Program
+    methods on BOTH backends;
+  * the prepared photonic bank is bit-identical to the legacy in-step
+    quantization (same quantizers, derived once);
+  * repeated ``generate`` calls never retrace (the legacy per-call
+    ``jax.jit`` closure rebuild is gone);
+  * ``sample(temperature>0, key=None)`` raises instead of silently going
+    greedy;
+  * Program-level photonic-vs-xla parity sits within W8A8 tolerance.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.api as api
+from repro.api import Program
+from repro.configs import smoke_variant
+from repro.configs.base import ModelConfig
+from repro.core import backend as backend_lib
+from repro.core import prepared as prepared_lib
+from repro.core.prm import ReuseConfig
+from repro.kernels import ops
+from repro.models import transformer as tfm
+from repro.serve import engine
+
+
+def _rel_l2(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+def small_cfg(**kw):
+    return ModelConfig(name="prog-t", family="dense", num_layers=2,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=128, compute_dtype="float32", **kw)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = small_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# =====================================================================
+# prepared banks
+# =====================================================================
+def test_prepare_tensor_matches_in_kernel_quantization():
+    """The bank's int8 tiles / scales are the SAME arrays the legacy
+    in-step path derives (shared quantizers) — prepared kernels are
+    bit-identical to quantize-in-step kernels."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 40))
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 48))
+    prep = prepared_lib.prepare_tensor(w)
+    a = ops.photonic_matmul_kernel(x, w, bm=8, bk=16, bn=16)
+    b = ops.photonic_matmul_prepared(x, prep.wq, prep.scale, bm=8, bk=16,
+                                     bn=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # transposed orientation: per-row image
+    xt = jax.random.normal(jax.random.PRNGKey(2), (6, 40))
+    at = ops.photonic_matmul_kernel_t(xt, w, bm=8, bk=16, bn=16)
+    bt = ops.photonic_matmul_prepared_t(xt, prep.wq_t, prep.scale_t, bm=8,
+                                        bk=16, bn=16)
+    np.testing.assert_array_equal(np.asarray(at), np.asarray(bt))
+
+
+def test_backend_dot_dispatches_on_prepared():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    prep = prepared_lib.prepare_tensor(w)
+    bk = backend_lib.PHOTONIC
+    np.testing.assert_array_equal(np.asarray(bk.dot(x, w)),
+                                  np.asarray(bk.dot(x, prep)))
+    np.testing.assert_array_equal(
+        np.asarray(bk.dot(x, w, transpose=True)),
+        np.asarray(bk.dot(x, prep, transpose=True)))
+    xs = jax.random.normal(jax.random.PRNGKey(2), (3, 4, 32))
+    np.testing.assert_array_equal(np.asarray(bk.reuse_dot(xs, w)),
+                                  np.asarray(bk.reuse_dot(xs, prep)))
+    # xla fallback on a prepared bank: W8 numerics, close to fp
+    y = backend_lib.XLA.dot(x, prep)
+    assert _rel_l2(y, x @ w) < 0.05
+
+
+def test_bank_checksum_detects_corruption():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    prep = prepared_lib.prepare_tensor(w)
+    assert float(prepared_lib.verify_bank(prep)) < 1e-4
+    bad = dataclasses.replace(
+        prep, wq=prep.wq.at[0, 0].add(jnp.int8(13)))
+    assert float(prepared_lib.verify_bank(bad)) > 1e-3
+
+
+def test_bank_structure(small):
+    cfg, params = small
+    prog = Program.build(cfg, params, execution="photonic")
+    st = prog.bank_stats()
+    # 2 layers x (wq, wk, wv, wo) attn — MLPs shared? dense: + w_gate/up/down
+    assert st["programmed_tensors"] > 0
+    assert st["int8_bytes"] > 0
+    # embedding table stays fp for the gather
+    assert isinstance(prog.bank["embed"]["table"], jax.Array)
+    assert float(prog.verify_banks()) < 1e-4
+    # xla bank is a pure compute-dtype cast (subsumes engine.cast_params)
+    prog_x = Program.build(cfg, params)
+    legacy = engine.cast_params(params, cfg)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), prog_x.bank, legacy)
+
+
+# =====================================================================
+# shim equivalence (the deprecation contract)
+# =====================================================================
+@pytest.mark.parametrize("execution", ["xla", "photonic"])
+def test_generate_shim_token_identical(small, execution):
+    """Old ``engine.generate(..., execution=)`` == ``Program.generate`` —
+    greedy AND temperature sampling (same key schedule)."""
+    cfg, params = small
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 1,
+                                cfg.vocab_size)
+    prog = Program.build(cfg, params, execution=execution)
+    for kw in ({"temperature": 0.0},
+               {"temperature": 0.7, "seed": 5}):
+        old = engine.generate(params, cfg, prompt, 5, execution=execution,
+                              **kw)
+        new = prog.generate(prompt, 5, **kw)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+@pytest.mark.parametrize("execution", ["xla", "photonic"])
+def test_step_shims_match_program_steps(small, execution):
+    """Old kwarg-threaded ``prefill_step``/``decode_step`` produce the SAME
+    logits as ``Program.prefill``/``Program.decode`` (bit-identical: the
+    prepared bank shares the legacy path's quantizers)."""
+    cfg, params = small
+    S = 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, S), 1,
+                              cfg.vocab_size)
+    prog = Program.build(cfg, params, execution=execution)
+    lx, cx = engine.prefill_step(params, cfg, {"tokens": toks}, S + 2,
+                                 execution=execution)
+    lp, cp = prog.prefill({"tokens": toks}, S + 2)
+    np.testing.assert_array_equal(np.asarray(lx), np.asarray(lp))
+    b = {"tokens": toks[:, :1]}
+    dx, _ = engine.decode_step(params, cfg, b, cx, S, execution=execution)
+    dp, _ = prog.decode(toks[:, :1], cp, S)
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(dp))
+    # greedy tokens off those logits agree too (token-identical contract)
+    np.testing.assert_array_equal(
+        np.asarray(engine.sample(dx, cfg.vocab_size)),
+        np.asarray(api.sample(dp, cfg.vocab_size)))
+
+
+def test_forward_shim_matches_program_loss_forward(small):
+    """Old ``forward(..., execution=)`` train-mode logits equal the graph
+    ``Program.loss`` evaluates (photonic: prepared vs in-step quantize)."""
+    cfg, params = small
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 10), 1,
+                                          cfg.vocab_size)}
+    compute = engine.cast_params(params, cfg)
+    logits, _, aux = tfm.forward(compute, cfg, batch, mode="train",
+                                 execution="photonic")
+    from repro.train.trainer import cross_entropy
+    ce_old = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                           cfg.vocab_size)
+    prog = Program.build(cfg, params, execution="photonic")
+    ce_new, _ = prog.loss(batch)
+    np.testing.assert_allclose(float(ce_old), float(ce_new), rtol=1e-6)
+
+
+# =====================================================================
+# retrace + sampling satellites
+# =====================================================================
+def test_generate_does_not_retrace(small):
+    """Repeated generate calls (and fresh Programs over the same cfg) hit
+    the module-level jit cells — zero retraces after the first call."""
+    cfg, params = small
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (2, 6), 1,
+                                cfg.vocab_size)
+    prog = Program.build(cfg, params)
+    prog.generate(prompt, 4)
+    before = dict(api.TRACE_COUNTS)
+    prog.generate(prompt + 1, 4)                       # same shapes
+    prog2 = Program.build(cfg, params)                 # fresh Program
+    prog2.generate(prompt, 4)
+    engine.generate(params, cfg, prompt, 4)            # shim per-call build
+    after = dict(api.TRACE_COUNTS)
+    assert before == after, f"retraced: {before} -> {after}"
+
+
+def test_sample_requires_key_when_stochastic():
+    logits = jnp.zeros((2, 128))
+    with pytest.raises(ValueError, match="PRNG key"):
+        api.sample(logits, 128, temperature=0.5)
+    with pytest.raises(ValueError, match="PRNG key"):
+        engine.sample(logits, 128, temperature=0.5)
+    # greedy without a key stays fine
+    assert api.sample(logits, 128).shape == (2,)
+    cfg = small_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    prog = Program.build(cfg, params)
+    _, caches = prog.prefill(
+        {"tokens": jnp.ones((1, 4), jnp.int32)}, 6)
+    with pytest.raises(ValueError, match="PRNG key"):
+        prog.decode_sample(jnp.ones((1, 1), jnp.int32), caches, 4,
+                           temperature=1.0)
+
+
+# =====================================================================
+# Program-level parity + serving round trip
+# =====================================================================
+def test_program_parity_within_w8a8_tolerance():
+    """Photonic-vs-xla rel-L2 through the Program API on the benchmark
+    arch, at the ISSUE-3 bound (<= 0.055)."""
+    cfg = smoke_variant("deepseek-7b")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1,
+                              cfg.vocab_size)
+    px = Program.build(cfg, params, execution="xla")
+    pp = Program.build(cfg, params, execution="photonic")
+    lx, cx = px.prefill({"tokens": toks}, 14)
+    lp, cp = pp.prefill({"tokens": toks}, 14)
+    assert _rel_l2(lp, lx) <= 0.055
+    dx, _ = px.decode(toks[:, :1], cx, 12)
+    dp, _ = pp.decode(toks[:, :1], cp, 12)
+    assert _rel_l2(dp, dx) <= 0.055
+
+
+def test_scheduler_over_program_token_identical(small):
+    """A prebuilt Program drops into the continuous scheduler; greedy
+    completions stay token-identical to solo Program.generate."""
+    from repro.serve.batcher import Request
+    from repro.serve.scheduler import ContinuousScheduler
+
+    cfg, params = small
+    prog = Program.build(cfg, params)
+    sched = ContinuousScheduler(prog, capacity=2, max_len=24)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=rid,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(3, 9))
+                                        ).astype(np.int32),
+                    max_new=int(rng.integers(2, 5)))
+            for rid in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    comps = {c.rid: c for c in sched.drain()}
+    for r in reqs:
+        solo = np.asarray(prog.generate(jnp.asarray(r.prompt)[None, :],
+                                        r.max_new))[0]
+        np.testing.assert_array_equal(comps[r.rid].tokens, solo)
+
+
+@pytest.mark.kernels
+def test_program_reuse_obu_stack_photonic():
+    """Program over a PRM/OBU shared stack (transpose + blocked shuffle):
+    prepared transposed banks serve the OBU orientation; parity holds."""
+    cfg = dataclasses.replace(
+        smoke_variant("deepseek-7b"),
+        reuse=ReuseConfig(num_basic=2, reuse_times=2,
+                          transforms=("identity", "shuffle_transpose"),
+                          shuffle_block=8, seed=1))
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 1,
+                              cfg.vocab_size)
+    out_old = engine.generate(params, cfg, toks, 4, execution="photonic")
+    prog = Program.build(cfg, params, execution="photonic")
+    np.testing.assert_array_equal(np.asarray(out_old),
+                                  np.asarray(prog.generate(toks, 4)))
+
+
+@pytest.mark.kernels
+def test_program_moe_blended_experts_prepared():
+    """PRM-blended MoE banks through the prepared reuse-resident path."""
+    cfg = smoke_variant("granite-moe-1b-a400m")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_basic_experts=2))
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 1,
+                              cfg.vocab_size)
+    out_old = engine.generate(params, cfg, toks, 3, execution="photonic")
+    prog = Program.build(cfg, params, execution="photonic")
+    np.testing.assert_array_equal(np.asarray(out_old),
+                                  np.asarray(prog.generate(toks, 3)))

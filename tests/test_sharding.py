@@ -4,11 +4,10 @@ import subprocess
 import sys
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_arch, smoke_variant
+from repro.configs import smoke_variant
 from repro.sharding import partition
 
 

@@ -3,7 +3,6 @@ determinism, serving engine, quantization."""
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
