@@ -265,11 +265,14 @@ def bench_backend(quick=False):
                                                         16, reps, det)
     for name, us in rows_:
         row(name, us, f"photonic-vs-xla rel-L2 {err:.4f}")
-    us_leg, us_prep, speedup, identical = \
-        backend_bench.bench_prepared_decode(reps, det)
-    row("prepared_decode_serving_lm", us_prep,
-        f"{speedup:.2f}x over re-quantize {us_leg:.1f}us "
-        f"(bit-identical {identical}; Program parity {prog_err:.4f})")
+    pd = backend_bench.bench_prepared_decode(reps, det)
+    row("prepared_decode_serving_lm", pd["prepared_us"],
+        f"{pd['speedup']:.2f}x over re-quantize "
+        f"{pd['requantize_us']:.1f}us (bit-identical "
+        f"{pd['logits_bit_identical']}; Program parity {prog_err:.4f})")
+    row("fused_decode_serving_lm", pd["fused_us"],
+        f"{pd['fused_speedup_vs_prepared']:.2f}x over prepared "
+        f"(megakernel; fused==split {pd['fused_vs_split_bit_identical']})")
     us_res, us_per = backend_bench.bench_resident_kernel(reps, det)
     row("resident_kernel_T4", us_res,
         f"vs {us_per:.1f}us per-call (1 vs 4 weight programs)")

@@ -14,7 +14,12 @@ quantizes every matmul weight into a :class:`~repro.core.prepared.
 PreparedTensor` bank: int8 tiles, per-channel TIA gains for both OBU
 orientations, and the W0-row checksums, all derived exactly once.  Decode
 steps then skip the per-step weight re-quantization the legacy path paid
-(DESIGN.md §Prepared weights).
+(DESIGN.md §Prepared weights) and run the fused decode-path megakernel
+(DESIGN.md §Fused decode path): because operand shapes are static under
+jit, the prefill and decode cells below each compile with their own
+shape-adaptive tile plan — prefill at full row tiles, decode at
+``round_up(B, 8)``-row serving tiles — with A8 quantization and the blend
+epilogue folded into the kernel.
 
 **No retrace across Programs.**  The jitted cells live at module level and
 key their trace cache on static ``(cfg, backend, ...)`` — two Programs with

@@ -1,5 +1,5 @@
 """Execution backends — the seam between the model stack and the compute
-substrate (DESIGN.md §Execution backends).
+substrate (DESIGN.md §Execution backends, §Fused decode path).
 
 Every weight matmul in ``models/*`` goes through ``Backend.dot`` (and the
 PRM-blended MoE banks through ``Backend.reuse_dot``); the OBU activation
@@ -13,14 +13,33 @@ backends implement the seam:
     offset-decomposed MVM (paper eq. 6) per matmul, fed either from a
     *prepared* bank (``core/prepared.py``, quantized once at
     ``Program.build`` — the write-once path) or by quantizing the fp weight
-    in-step (legacy shims; see DESIGN.md §Execution backends "Prepared
-    weight banks"); the OBU transpose is the
-    pre-swapped kernel variant (``photonic_mvm_t``, in-register tile swap);
-    *blocked* OBU shuffles fold into the blend kernel's index-map epilogue;
-    PRM-blended expert banks stream through the weight-stationary
-    reuse-resident kernel.  On CPU the kernels run with ``interpret=True``
-    (see `kernels/ops.py`); numerics differ from "xla" by exactly the W8A8
-    quantization error, which the backend-parity tests bound.
+    in-step (legacy shims); the OBU transpose is the pre-swapped kernel
+    variant (in-register tile swap); *blocked* OBU shuffles fold into an
+    index-map epilogue; PRM-blended expert banks stream through the
+    weight-stationary reuse-resident kernel.  On CPU the kernels run with
+    ``interpret=True`` (see `kernels/ops.py`); numerics differ from "xla"
+    by exactly the W8A8 quantization error, which the backend-parity tests
+    bound.
+
+**Fused decode path** (the default photonic serving configuration):
+
+  * ``fused=True`` routes every matmul through the one-``pallas_call``
+    megakernel (`kernels/photonic_mvm.photonic_mvm_fused`): A8 quantization
+    happens in the kernel prologue (only the abs-max reduction runs
+    outside — no separate full XLA pass materializing int8 activations),
+    and the blend epilogue (bias + activation + blocked output shuffle)
+    folds into the kernel's ``_finalize``.  ``fused=False`` is the split
+    comparator: quantize-outside + MVM kernel + separate blend kernel, at
+    the SAME tile plan — bit-identical to the fused path for the bias-free
+    epilogues the model uses (the fused-vs-unfused acceptance gate).
+  * ``adaptive=True`` derives ``(bm, bk, bn)`` per call from the actual
+    operand shapes via :meth:`Backend.tile_plan` instead of running every
+    decode-width matmul on fixed 128-tiles; each jitted cell (prefill vs
+    decode) compiles with its own plan because shapes are static under
+    trace.  ``adaptive=False`` pins the construction-time ``(bm, bk, bn)``
+    as fixed tile sizes (note the field *defaults* are now the 512
+    adaptive caps — reproducing the pre-fusion backend exactly takes
+    ``Backend(bm=128, bk=128, bn=128, adaptive=False, fused=False)``).
 
 The photonic backend is *inference-only*: quantization rounding has no
 useful gradient and the Pallas calls define no VJP.  Training cells keep
@@ -41,23 +60,75 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import obu
-from repro.core.prepared import PreparedTensor
+from repro.core.prepared import (PreparedTensor, quantize_weight,
+                                 quantize_weight_t)
 from repro.kernels import ops
+from repro.kernels.photonic_mvm import tile_plan
 
 EXECUTIONS = ("xla", "photonic")
 
 
+def _apply_activation(y, activation):
+    if activation in (None, "none"):
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "silu":
+        return jax.nn.silu(y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _epilogue_unfused(y, bias, block_perm, block, activation):
+    """The split blend epilogue: a second Pallas pass for blocked shuffles
+    (`kernels/blend.py`), plain jnp for bias/activation-only epilogues —
+    exactly what the model layers ran before the fusion existed."""
+    if block_perm is not None:
+        b = (jnp.zeros((y.shape[-1],), y.dtype) if bias is None
+             else bias.astype(y.dtype))
+        return ops.blend_shuffle(y, b, block_perm, block=block,
+                                 activation=activation or "none")
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return _apply_activation(y, activation)
+
+
+def _epilogue_xla(y, bias, block_perm, block, activation):
+    """Reference epilogue on the xla backend (gather + jnp ops)."""
+    if block_perm is not None:
+        perm = np.asarray(block_perm)
+        C = y.shape[-1]
+        if block <= 0 or C % block != 0 or perm.shape[0] * block != C:
+            raise ValueError(f"blocked shuffle needs C % block == 0 and a "
+                             f"full permutation, got C={C} block={block}")
+        idx = (perm[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+        y = jnp.take(y, jnp.asarray(idx), axis=-1)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return _apply_activation(y, activation)
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """Static (hashable, trace-time) description of the matmul substrate."""
+    """Static (hashable, trace-time) description of the matmul substrate.
+
+    ``bm/bk/bn`` are the tile-plan *caps* under ``adaptive=True`` and the
+    exact Pallas tile sizes under ``adaptive=False`` (the pre-fusion fixed
+    plan).  ``fused`` selects the megakernel vs the split
+    quantize/MVM/blend pipeline (photonic only; same math either way).
+    """
 
     execution: str = "xla"
-    bm: int = 128                     # Pallas tile sizes (photonic only)
-    bk: int = 128
-    bn: int = 128
+    bm: int = 128                     # row tile cap (exact when !adaptive)
+    bk: int = 512                     # reduction tile cap
+    bn: int = 512                     # output-column tile cap
+    fused: bool = True                # megakernel vs split pipeline
+    adaptive: bool = True             # shape-adaptive tile planning
 
     def __post_init__(self):
         if self.execution not in EXECUTIONS:
@@ -68,27 +139,48 @@ class Backend:
     def is_photonic(self) -> bool:
         return self.execution == "photonic"
 
+    # ---------------------------------------------------------- tile plans
+    def tile_plan(self, M: int, K: int, N: int) -> tuple:
+        """Resolve ``(bm, bk, bn)`` for an (M, K) x (K, N) matmul.  Shapes
+        are static at trace time, so every jitted cell (prefill, decode,
+        train) compiles with its own plan."""
+        if not self.adaptive:
+            return self.bm, self.bk, self.bn
+        return tile_plan(M, K, N, cap_m=self.bm, cap_k=self.bk,
+                         cap_n=self.bn)
+
     # ------------------------------------------------------------- matmuls
-    def dot(self, x, w, *, transpose: bool = False):
+    def dot(self, x, w, *, transpose: bool = False, bias=None,
+            block_perm=None, block: int = 0, activation=None):
         """``x @ w`` (w: (k, n)) or ``x @ w.T`` (w: (n, k)) — the weight
-        matmul primitive every layer routes through.  ``w`` may be a raw fp
-        array (quantized in-step on the photonic backend) or a
-        ``PreparedTensor`` bank (quantized once at ``Program.build``)."""
+        matmul primitive every layer routes through — plus an optional
+        blend epilogue (bias + activation + blocked output shuffle) that
+        the photonic megakernel folds into the matmul's ``_finalize``.
+
+        ``w`` may be a raw fp array (quantized in-step on the photonic
+        backend) or a ``PreparedTensor`` bank (quantized once at
+        ``Program.build``)."""
         if isinstance(w, PreparedTensor):
-            return self.dot_prepared(x, w, transpose=transpose)
+            return self.dot_prepared(x, w, transpose=transpose, bias=bias,
+                                     block_perm=block_perm, block=block,
+                                     activation=activation)
         if not self.is_photonic:
-            return obu.blend_dot(x, w, transpose=transpose)
+            y = obu.blend_dot(x, w, transpose=transpose)
+            return _epilogue_xla(y, bias, block_perm, block, activation)
         if transpose:
             if w.shape[-1] != x.shape[-1]:
                 raise ValueError(f"transpose blend needs square-compatible "
                                  f"dims, got x{x.shape} w{w.shape}")
-            return ops.photonic_matmul_kernel_t(x, w, bm=self.bm, bk=self.bk,
-                                                bn=self.bn)
-        return ops.photonic_matmul_kernel(x, w, bm=self.bm, bk=self.bk,
-                                          bn=self.bn)
+            wq, wscale = quantize_weight_t(w)
+        else:
+            wq, wscale = quantize_weight(w)
+        return self._photonic_matmul(x, wq, wscale, transpose=transpose,
+                                     bias=bias, block_perm=block_perm,
+                                     block=block, activation=activation)
 
     def dot_prepared(self, x, prep: PreparedTensor, *,
-                     transpose: bool = False):
+                     transpose: bool = False, bias=None, block_perm=None,
+                     block: int = 0, activation=None):
         """``dot`` against an already-programmed bank: no in-step weight
         quantization.  The transposed orientation uses the bank's per-row
         image (``wq_t``/``scale_t``) — the same array the optical transpose
@@ -103,17 +195,39 @@ class Backend:
             else:
                 w = (prep.wq.astype(jnp.float32)
                      * (prep.scale / 127.0)[..., None, :]).astype(x.dtype)
-            return obu.blend_dot(x, w, transpose=transpose)
+            y = obu.blend_dot(x, w, transpose=transpose)
+            return _epilogue_xla(y, bias, block_perm, block, activation)
         if transpose:
             if prep.shape[-1] != x.shape[-1]:
                 raise ValueError(f"transpose blend needs square-compatible "
                                  f"dims, got x{x.shape} w{prep.shape}")
-            return ops.photonic_matmul_prepared_t(
-                x, prep.wq_t, prep.scale_t, bm=self.bm, bk=self.bk,
-                bn=self.bn)
-        return ops.photonic_matmul_prepared(x, prep.wq, prep.scale,
-                                            bm=self.bm, bk=self.bk,
-                                            bn=self.bn)
+            wq, wscale = prep.wq_t, prep.scale_t
+        else:
+            wq, wscale = prep.wq, prep.scale
+        return self._photonic_matmul(x, wq, wscale, transpose=transpose,
+                                     bias=bias, block_perm=block_perm,
+                                     block=block, activation=activation)
+
+    def _photonic_matmul(self, x, wq, wscale, *, transpose, bias,
+                         block_perm, block, activation):
+        """Shared photonic dispatch: resolve the tile plan from the actual
+        operand shapes, then run either the fused megakernel or the split
+        quantize -> MVM -> blend pipeline at that same plan."""
+        M = 1
+        for d in x.shape[:-1]:
+            M *= d
+        K = x.shape[-1]
+        N = wq.shape[-2] if transpose else wq.shape[-1]
+        bm, bk, bn = self.tile_plan(M, K, N)
+        if self.fused:
+            return ops.photonic_matmul_fused(
+                x, wq, wscale, transpose=transpose, bias=bias,
+                block_perm=block_perm, block=block,
+                activation=activation or "none", bm=bm, bk=bk, bn=bn)
+        mm = (ops.photonic_matmul_prepared_t if transpose
+              else ops.photonic_matmul_prepared)
+        y = mm(x, wq, wscale, bm=bm, bk=bk, bn=bn)
+        return _epilogue_unfused(y, bias, block_perm, block, activation)
 
     def reuse_dot(self, x_stack, w):
         """T independent activation streams through ONE weight: x_stack
@@ -124,7 +238,10 @@ class Backend:
             return self.reuse_dot_prepared(x_stack, w)
         if not self.is_photonic:
             return obu.blend_dot(x_stack, w, transpose=False)
-        return ops.reuse_resident_matmul(x_stack, w, bm=self.bm, bn=self.bn)
+        bm, _, bn = self.tile_plan(
+            int(np.prod(x_stack.shape[1:-1])), x_stack.shape[-1],
+            w.shape[-1])
+        return ops.reuse_resident_matmul(x_stack, w, bm=bm, bn=bn)
 
     def reuse_dot_prepared(self, x_stack, prep: PreparedTensor):
         """Reuse-resident matmul against a programmed bank (the fully
@@ -134,8 +251,11 @@ class Backend:
             w = (prep.wq.astype(jnp.float32)
                  * (prep.scale / 127.0)[..., None, :]).astype(x_stack.dtype)
             return obu.blend_dot(x_stack, w, transpose=False)
+        bm, _, bn = self.tile_plan(
+            int(np.prod(x_stack.shape[1:-1])), x_stack.shape[-1],
+            prep.shape[-1])
         return ops.reuse_resident_matmul_prepared(
-            x_stack, prep.wq, prep.scale, bm=self.bm, bn=self.bn)
+            x_stack, prep.wq, prep.scale, bm=bm, bn=bn)
 
     # -------------------------------------------------------------- shuffle
     def shuffle(self, h, perm, block_perm=None, block: int = 0):

@@ -50,6 +50,21 @@ def quantize_symmetric(x: jax.Array, bits: int, axis=None):
     return q.astype(jnp.int8), scale.astype(jnp.float32)
 
 
+def a8_scale(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Per-tensor A8 scale of ``x`` — the scale half of
+    :func:`quantize_symmetric`, without materializing the int8 image.
+
+    The fused megakernel (`kernels/photonic_mvm.photonic_mvm_fused`) folds
+    the round/clip grid into its prologue; the only activation pre-pass left
+    outside the kernel is this abs-max reduction (a read-only XLA reduce —
+    no full-tensor int8 write to HBM).  Derivation matches
+    ``quantize_symmetric`` exactly so fused and split execution quantize to
+    the same grid."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x))
+    return (jnp.maximum(amax, 1e-8) / qmax).astype(jnp.float32)
+
+
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 

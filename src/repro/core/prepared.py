@@ -29,6 +29,13 @@ prepared at build time is bit-identical to what the legacy per-step path
 would have derived — Program-vs-legacy outputs match exactly, not just
 within tolerance.
 
+Banks feed the fused decode-path megakernel directly (DESIGN.md §Fused
+decode path): ``Backend.dot`` hands ``wq``/``scale`` (or the transposed
+``wq_t``/``scale_t`` image) straight to
+``kernels/photonic_mvm.photonic_mvm_fused``, whose prologue quantizes the
+*activations* in-register — at serving time nothing weight-side is ever
+recomputed, and nothing activation-side round-trips HBM.
+
 Leading batch dims are free: a stacked segment's (R, K, N) weight — or a
 MoE bank's (R, E, K, N) — prepares each slice exactly as the per-call path
 would (the reductions run over the last two axes only).

@@ -40,10 +40,18 @@ def blend_shuffle(x, bias, block_perm, *, block=128, bm=128,
     the shuffle is realized purely as grid index remapping.
     """
     M, C = x.shape
+    if block <= 0 or C % block != 0:
+        # a ragged channel axis would silently drop the C % block tail
+        # columns from every block slice — refuse instead
+        raise ValueError(
+            f"blend_shuffle needs the channel axis to split into whole "
+            f"blocks: C={C} is not a multiple of block={block}")
     nblk = C // block
     perm = np.asarray(block_perm, dtype=np.int32)
-    assert sorted(perm.tolist()) == list(range(nblk)), \
-        "block_perm must be a permutation"
+    if sorted(perm.tolist()) != list(range(nblk)):
+        raise ValueError(
+            f"block_perm must be a permutation of range({nblk}), got "
+            f"{perm.tolist()}")
     # ragged row counts (serving batches) are zero-padded to the row block,
     # exactly like photonic_mvm._pad_to, and sliced back after the kernel
     pad_m = (-M) % bm

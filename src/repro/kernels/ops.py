@@ -4,7 +4,7 @@ On CPU (this container) the kernels execute with ``interpret=True``; on a
 real TPU backend they lower natively.  All shape plumbing (quantization,
 padding, head flattening) lives here so callers stay tensor-shaped.
 
-Two families of matmul entry points:
+Three families of matmul entry points:
 
   * ``photonic_matmul_kernel`` / ``_t`` / ``reuse_resident_matmul`` — the
     legacy self-contained path: quantize the fp weight in-step, then run the
@@ -16,17 +16,24 @@ Two families of matmul entry points:
     skip straight to the kernel.  Both families share the same quantizers
     (`core.prepared.quantize_weight*`), so prepared and in-step execution
     are bit-identical.
+  * ``photonic_matmul_fused`` — the decode-path megakernel (DESIGN.md
+    §Fused decode path): activations enter the kernel floating (A8 grid in
+    the prologue; the only pre-pass is the ``a8_scale`` abs-max reduction),
+    both OBU orientations select a kernel variant, and the blend epilogue
+    (bias + activation + blocked output shuffle) folds into ``_finalize``.
+    Bit-identical to prepared-MVM + separate blend at the same tile plan.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.core.photonic import quantize_symmetric
+from repro.core.photonic import a8_scale, quantize_symmetric
 from repro.core.prepared import quantize_weight, quantize_weight_t
 from repro.kernels import blend as _blend
 from repro.kernels import flash_attention as _fa
 from repro.kernels import photonic_mvm as _pm
 from repro.kernels import ssd as _ssd
+from repro.kernels.photonic_mvm import round_up, tile_plan  # noqa: F401
 
 
 def _interpret() -> bool:
@@ -104,18 +111,51 @@ def reuse_resident_matmul_prepared(x_stack, wq, wscale, *, bm=128, bn=128,
     K = x_stack.shape[-1]
     x2 = x_stack.reshape(T, -1, K)
     xq, xscale = quantize_symmetric(x2, 8, axis=(1, 2))          # (T,1,1)
+    # clamp the row tile to the serving width, but keep it MXU-sublane
+    # aligned: a 2-row stream runs an 8-row tile, never a ragged 2-row one
+    bm_eff = min(bm, round_up(x2.shape[1], 8))
     y = _pm.photonic_mvm_resident(xq, wq, xscale.reshape(T),
                                   wscale.reshape(-1),
-                                  bm=min(bm, max(1, x2.shape[1])), bn=bn,
+                                  bm=bm_eff, bn=bn,
                                   qmax=qmax, interpret=_interpret())
     return y.reshape(T, *lead, wq.shape[1]).astype(x_stack.dtype)
+
+
+# =========================================================================
+# fused decode-path megakernel (quantize + MVM + blend in one pallas_call)
+# =========================================================================
+def photonic_matmul_fused(x, wq, wscale, *, transpose=False, bias=None,
+                          block_perm=None, block=0, activation="none",
+                          bm=128, bk=128, bn=128, qmax=127.0):
+    """One-``pallas_call`` serving matmul against a prepared bank.
+
+    x: fp (..., k); wq/wscale: a prepared orientation — (k, n)/per-column,
+    or (n, k)/per-row with ``transpose=True``.  The A8 grid is applied in
+    the kernel prologue (only ``a8_scale``'s abs-max reduction runs
+    outside); ``bias``/``activation``/``block_perm`` run as the in-kernel
+    blend epilogue.  Bit-identical to ``photonic_matmul_prepared*`` followed
+    by ``blend_shuffle`` at the same (bm, bk, bn) — except the bias add,
+    which XLA contracts into the rescale fma (<= 1 ulp; see
+    ``photonic_mvm._kernel_fused``)."""
+    xscale = a8_scale(x)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    n_out = wq.shape[0] if transpose else wq.shape[1]
+    perm = tuple(int(v) for v in block_perm) if block_perm is not None \
+        else None
+    y = _pm.photonic_mvm_fused(
+        x2, wq, xscale, wscale.reshape(-1), bias=bias, bm=bm, bk=bk, bn=bn,
+        qmax=qmax, transpose=transpose, activation=activation,
+        block_perm=perm, block=block, interpret=_interpret(),
+        out_dtype=x.dtype)
+    return y.reshape(*lead, n_out)
 
 
 def blend_shuffle(x, bias, block_perm, *, block=128, activation="relu"):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     y = _blend.blend_shuffle(x2, bias, block_perm, block=block,
-                             bm=min(128, x2.shape[0]),
+                             bm=min(128, round_up(x2.shape[0], 8)),
                              activation=activation,
                              interpret=_interpret())
     return y.reshape(*lead, x.shape[-1])

@@ -13,10 +13,33 @@ into VMEM and streams an activation block through it; the rank-1 offset row
 like the hardware's shared 1xN W0 crossbar row.
 
 Grid: (M/bm, N/bn, K/bk), K innermost; fp32 accumulation in VMEM scratch.
+
+Two generations of kernels live here:
+
+  * the split family (``photonic_mvm`` / ``_t`` / ``_resident``) — consume
+    already-quantized int8 activations; quantization, padding, and any blend
+    epilogue are separate XLA/Pallas passes around the call;
+  * ``photonic_mvm_fused`` — the decode-path **megakernel**: fp activations
+    stream in and are A8-quantized in the kernel prologue (the per-tensor
+    scale arrives as a tiny scalar input — the only pre-pass left is an
+    abs-max reduction), the weight tile may be either OBU orientation
+    (in-register swap), and the blend epilogue (bias + activation + blocked
+    output permutation) folds into ``_finalize``: the *output* BlockSpec's
+    scalar-prefetched index map writes computed column block ``j`` to its
+    shuffled position, exactly the trick ``kernels/blend.py`` plays on its
+    input side.  MVM + quantize + blend = one ``pallas_call``, zero
+    intermediate HBM traffic.
+
+Tile sizes come from :func:`tile_plan` (shape-adaptive: decode-width row
+counts round to 8, reduction/column tiles grow to cover small d_model in one
+grid step) rather than hard-coded 128s.
 """
 from __future__ import annotations
 
 import functools
+import math
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -207,3 +230,224 @@ def photonic_mvm_resident(xq, wq, x_scale, w_scale, *, bm=128, bn=128,
     )(xq_p, wq_p, jnp.reshape(x_scale, (T, 1)).astype(jnp.float32),
       ws_p.astype(jnp.float32))
     return out[:, :M, :N]
+
+
+# =========================================================================
+# shape-adaptive tile planning
+# =========================================================================
+def round_up(v: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= v (>= one mult for v <= 0)."""
+    return -(-max(v, 1) // mult) * mult
+
+
+def _fit_dim(d: int, unit: int, cap: int) -> int:
+    """Tile size for a length-``d`` axis: the whole (unit-rounded) axis when
+    it fits under ``cap`` — one grid step, zero padding — else the largest
+    multiple of ``unit`` <= cap that divides the rounded axis (no padding),
+    falling back to ``unit``."""
+    if cap < unit:
+        return cap                       # caller pinned a sub-unit tile
+    du = round_up(d, unit)
+    if du <= cap:
+        return du
+    for t in range(cap - cap % unit, unit - 1, -unit):
+        if du % t == 0:
+            return t
+    return unit
+
+
+def tile_plan(M: int, K: int, N: int, *, cap_m: int = 128, cap_k: int = 512,
+              cap_n: int = 512) -> tuple:
+    """Derive ``(bm, bk, bn)`` from actual operand shapes.
+
+    The serving-width rule of DESIGN.md §Fused decode path: ``bm`` rounds the
+    real row count to the 8-row sublane (a B=2 decode step runs an 8-row
+    tile, not a 128-row one — 16x less padded MXU work) and caps at
+    ``cap_m``; ``bk``/``bn`` keep the 128 lane unit but grow to swallow a
+    whole d_model/d_ff axis in one grid step when it fits the cap, which
+    both feeds the MXU longer per weight fetch and eliminates the
+    pad/slice HBM round-trip for already-aligned shapes."""
+    return (min(cap_m, round_up(M, 8)),
+            _fit_dim(K, 128, cap_k),
+            _fit_dim(N, 128, cap_n))
+
+
+# =========================================================================
+# fused decode-path megakernel
+# =========================================================================
+ACTIVATIONS = ("none", "relu", "silu")
+
+
+def _act(y, activation: str):
+    # same op set (and the same expressions) as kernels/blend.py: these stay
+    # bit-identical whether they run in the blend kernel or this epilogue
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "silu":
+        return y * jax.nn.sigmoid(y)
+    if activation != "none":
+        raise ValueError(f"unsupported fused activation {activation!r}; "
+                         f"have {ACTIVATIONS}")
+    return y
+
+
+def _kernel_fused(oidx_ref, x_ref, wq_ref, xs_ref, ws_ref, *rest, nk: int,
+                  qmax: float, transpose_w: bool, activation: str,
+                  has_bias: bool):
+    """Quantize-in-prologue, blend-in-epilogue MVM step.
+
+    ``x_ref`` holds *floating* activations; the A8 grid (round / clip at the
+    prefetched per-tensor scale) is applied in-register, bit-identically to
+    ``core.photonic.quantize_symmetric`` with the same scale.  The epilogue
+    runs on the output tile after the TIA rescale + output-dtype cast — the
+    exact op order of the standalone blend kernel, so the activation /
+    blocked-shuffle epilogues match separate execution bit-for-bit (bias:
+    see the fma note in ``_finalize``).  ``oidx_ref`` is consumed by the
+    BlockSpec index maps (output + bias), not the body."""
+    if has_bias:
+        b_ref, o_ref, acc_ref, xsum_ref = rest
+    else:
+        b_ref = None
+        o_ref, acc_ref, xsum_ref = rest
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xsum_ref[...] = jnp.zeros_like(xsum_ref)
+
+    # in-kernel A8: divide/round in the INPUT dtype, exactly like
+    # quantize_symmetric (bf16 activations round on the bf16 grid; the f32
+    # scale is the exact up-cast of the input-dtype scale, so the down-cast
+    # recovers it losslessly) — keeps fused == split bit-identical for
+    # every activation dtype, not just f32
+    scale = xs_ref[0, 0]
+    x_in = x_ref[...]
+    xq = jnp.clip(jnp.round(x_in / scale.astype(x_in.dtype)),
+                  -qmax - 1.0, qmax).astype(jnp.float32)
+    w = wq_ref[...].astype(jnp.float32)
+    if transpose_w:
+        w = w.T                                  # OBU port swap, in-register
+    w_prime = w / (2.0 * qmax) + 0.5
+    acc_ref[...] += jnp.dot(xq, w_prime, preferred_element_type=jnp.float32)
+    xsum_ref[...] += jnp.sum(xq, axis=1, keepdims=True)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        y = 2.0 * (acc_ref[...] - 0.5 * xsum_ref[...])
+        out_scale = xs_ref[0, 0] * ws_ref[...]
+        y = (y * out_scale).astype(o_ref.dtype)
+        if has_bias:
+            # the TIA rescale product feeds this add unrounded — XLA
+            # contracts the pair into an fma (even across an
+            # optimization_barrier), so the fused bias lands <= 1 ulp off
+            # the split path's store-then-add (and is the more accurate of
+            # the two).  The bias-free epilogues (activation / blocked
+            # shuffle — all the model path uses) stay bit-identical.
+            y = y + b_ref[...]
+        o_ref[...] = _act(y, activation).astype(o_ref.dtype)
+
+
+def _out_block_index(block_perm, block: int, N: int, bn: int) -> np.ndarray:
+    """Expand a block-level output permutation to bn-tile granularity.
+
+    Computed column block ``j`` lands at output block ``inv_perm[j]`` (the
+    blend kernel reads input block ``perm[j]`` while writing ``j``; the MVM
+    side inverts that because it walks *computed* columns)."""
+    perm = np.asarray(block_perm, dtype=np.int64)
+    nblk = perm.shape[0]
+    if sorted(perm.tolist()) != list(range(nblk)):
+        raise ValueError("block_perm must be a permutation")
+    if nblk * block != N:
+        raise ValueError(f"block_perm covers {nblk * block} channels, "
+                         f"output has {N}")
+    inv = np.argsort(perm)
+    r = block // bn
+    fine = inv[:, None] * r + np.arange(r)[None, :]
+    return fine.reshape(-1).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bm", "bk", "bn", "qmax", "transpose", "activation", "block_perm",
+    "block", "interpret", "out_dtype"))
+def photonic_mvm_fused(x, wq, x_scale, w_scale, *, bias=None, bm=128, bk=128,
+                       bn=128, qmax=127.0, transpose=False,
+                       activation="none", block_perm=None, block=0,
+                       interpret=True, out_dtype=jnp.float32):
+    """The decode-path megakernel: one ``pallas_call`` for
+    quantize -> offset-decomposed MVM -> bias -> activation -> blocked
+    output shuffle.
+
+    x: (M, K) floating; wq: int8 (K, N) per-column quantized, or (N, K)
+    per-row quantized with ``transpose=True`` (the pre-swapped OBU
+    orientation); x_scale: the A8 scale (from ``core.photonic.a8_scale`` —
+    NOT the already-quantized activations); w_scale: (N,); bias: optional
+    (N,), indexed by *output* position like ``blend_shuffle``;
+    block_perm: optional tuple — output block ``q`` carries computed block
+    ``block_perm[q]``, realized purely by the output BlockSpec's
+    scalar-prefetched index map.  Returns (M, N) ``out_dtype``.
+    """
+    M, K = x.shape
+    if transpose:
+        N, K2 = wq.shape
+    else:
+        K2, N = wq.shape
+    assert K == K2
+    if block_perm is not None:
+        if block <= 0:
+            raise ValueError("block_perm needs a positive block size")
+        bn = math.gcd(bn, block)         # bn must divide the shuffle block
+        if N % block != 0:
+            raise ValueError(f"blocked shuffle needs C % block == 0, got "
+                             f"C={N}, block={block}")
+    x_p = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    if transpose:
+        wq_p = _pad_to(_pad_to(wq, bn, 0), bk, 1)
+        Np = wq_p.shape[0]
+    else:
+        wq_p = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+        Np = wq_p.shape[1]
+    ws_p = _pad_to(w_scale.reshape(1, N), bn, 1)
+    Mp, Kp = x_p.shape
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    if block_perm is not None:
+        oidx = _out_block_index(block_perm, block, N, bn)
+    else:
+        oidx = np.arange(Np // bn, dtype=np.int32)
+    w_spec = (pl.BlockSpec((bn, bk), lambda i, j, k, oi: (j, k)) if transpose
+              else pl.BlockSpec((bk, bn), lambda i, j, k, oi: (k, j)))
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k, oi: (i, k)),
+        w_spec,
+        pl.BlockSpec((1, 1), lambda i, j, k, oi: (0, 0)),
+        pl.BlockSpec((1, bn), lambda i, j, k, oi: (0, j)),
+    ]
+    operands = [x_p, wq_p,
+                jnp.reshape(x_scale, (1, 1)).astype(jnp.float32),
+                ws_p.astype(jnp.float32)]
+    has_bias = bias is not None
+    if has_bias:
+        # bias is indexed by OUTPUT position: computed block j lands at
+        # oidx[j], so its bias tile is read from there too
+        in_specs.append(
+            pl.BlockSpec((1, bn), lambda i, j, k, oi: (0, oi[j])))
+        operands.append(_pad_to(bias.reshape(1, N), bn, 1))
+    gridspec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, oi: (i, oi[j])),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_fused, nk=grid[2], qmax=qmax,
+                          transpose_w=transpose, activation=activation,
+                          has_bias=has_bias),
+        grid_spec=gridspec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        interpret=interpret,
+    )(jnp.asarray(oidx), *operands)
+    if Mp == M and Np == N:
+        return out                       # aligned: no slice round-trip
+    return out[:M, :N]

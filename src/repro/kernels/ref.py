@@ -30,6 +30,32 @@ def photonic_mvm_resident_ref(xq, wq, x_scales, w_scale, qmax=127.0):
                       for t in range(xq.shape[0])])
 
 
+def photonic_mvm_fused_ref(x, wq, x_scale, w_scale, *, transpose=False,
+                           bias=None, block_perm=None, block=0,
+                           activation="none", qmax=127.0):
+    """Oracle for the fused megakernel: explicit A8 quantization at the
+    given scale, the dequantized matmul, then the blend epilogue — the
+    exact unfused composition the kernel collapses into one pass.  The
+    round runs in x's dtype (quantize_symmetric semantics: bf16
+    activations land on the bf16 grid)."""
+    xq = jnp.clip(jnp.round(x / x_scale.astype(x.dtype)),
+                  -qmax - 1.0, qmax).astype(jnp.float32)
+    if transpose:
+        y = photonic_mvm_t_ref(xq, wq, x_scale, w_scale, qmax=qmax)
+    else:
+        y = photonic_mvm_ref(xq, wq, x_scale, w_scale, qmax=qmax)
+    y = y.astype(x.dtype)
+    if bias is None and block_perm is None and activation == "none":
+        return y
+    C = y.shape[-1]
+    b = jnp.zeros((C,), y.dtype) if bias is None else bias
+    if block_perm is None:
+        perm, blk = np.arange(1), C          # identity, single block
+    else:
+        perm, blk = np.asarray(block_perm), block
+    return blend_shuffle_ref(y, b, perm, blk, activation=activation)
+
+
 def blend_shuffle_ref(x, bias, block_perm, block, activation="relu"):
     M, C = x.shape
     perm = np.asarray(block_perm)

@@ -100,15 +100,20 @@ def apply_mlp(p, x, act: str = "swiglu", transpose: bool = False,
     bk = resolve_backend(backend)
     if act == "swiglu":
         wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+        # the gate's silu rides the matmul's fused blend epilogue on the
+        # photonic megakernel (one pallas_call; bit-identical to the
+        # separate jax.nn.silu) and is a plain post-dot silu on xla
         if transpose:
-            g = bk.dot(x, wd, transpose=True)           # (ff, d).T : d->ff
+            g = bk.dot(x, wd, transpose=True,           # (ff, d).T : d->ff
+                       activation="silu")
             u = bk.dot(x, wu, transpose=False)          # unchanged
-            h = jax.nn.silu(g) * u
-            return bk.dot(h, wg, transpose=True)        # (d, ff).T : ff->d
-        g = bk.dot(x, wg, transpose=False)
+            return bk.dot(g * u, wg, transpose=True)    # (d, ff).T : ff->d
+        g = bk.dot(x, wg, transpose=False, activation="silu")
         u = bk.dot(x, wu, transpose=False)
-        h = jax.nn.silu(g) * u
-        return bk.dot(h, wd, transpose=False)
+        return bk.dot(g * u, wd, transpose=False)
+    # gelu stays outside the kernel: its tanh/mul chain re-rounds under
+    # XLA's fma contraction, so fusing it would break the fused-vs-split
+    # bit-identity guarantee the serving path relies on
     wu, wd = p["w_up"], p["w_down"]
     if transpose:
         h = jax.nn.gelu(bk.dot(x, wd, transpose=True))

@@ -136,30 +136,48 @@ def _photonic_expert_ffn(bk, p, xe, mcfg: MoEConfig, dtype, transpose):
     nb = wg.shape[0]                       # R_e physical banks (== E if none)
     blended = nb < E
 
-    def bank_dot(h, w_bank, transpose_w=False):
+    def bank_dot(h, w_bank, transpose_w=False, activation=None):
         if blended and not transpose_w and E % nb == 0:
             outs = [None] * E
             for r in range(nb):            # logical experts e ≡ r (mod R_e)
                 y = bk.reuse_dot(h[r::nb], w_bank[r])
                 for j, e in enumerate(range(r, E, nb)):
                     outs[e] = y[j]
-            return jnp.stack(outs)
-        return jnp.stack([bk.dot(h[e], w_bank[e % nb], transpose=transpose_w)
+            y = jnp.stack(outs)
+            return _apply_act(y, activation)
+        return jnp.stack([bk.dot(h[e], w_bank[e % nb], transpose=transpose_w,
+                                 activation=activation)
                           for e in range(E)])
 
+    def _apply_act(y, activation):
+        if activation in (None, "none"):
+            return y
+        if activation == "silu":
+            return jax.nn.silu(y)
+        raise ValueError(f"unsupported activation {activation!r} on the "
+                         f"reuse-resident expert path")
+
     if transpose:
-        gate = bank_dot(rows, wd, transpose_w=True)  # W_down.T as up-proj
+        # the gate silu fuses into the per-expert megakernel's blend
+        # epilogue (per-call dot path); the reuse-resident branch applies
+        # it post-kernel — same elementwise math either way
+        gate = bank_dot(rows, wd, transpose_w=True,  # W_down.T as up-proj
+                        activation="silu")
         up = bank_dot(rows, wu)
-        h = jax.nn.silu(gate) * up
-        out = bank_dot(h, wg, transpose_w=True)      # W_gate.T as down-proj
+        out = bank_dot(gate * up, wg, transpose_w=True)  # W_gate.T: down-proj
     else:
-        gate = bank_dot(rows, wg)
         if blended:
+            # blended experts diversify the gate by a static fine-grained
+            # shuffle; silu commutes with the gather but the literal order
+            # (gather then silu) is kept for bit-stability with history
+            gate = bank_dot(rows, wg)
             perms = _expert_gate_perms(mcfg)         # (E, f) static
             gate = jnp.take_along_axis(gate, perms[:, None, :], axis=-1)
+            gate = jax.nn.silu(gate)
+        else:
+            gate = bank_dot(rows, wg, activation="silu")
         up = bank_dot(rows, wu)
-        h = jax.nn.silu(gate) * up
-        out = bank_dot(h, wd)
+        out = bank_dot(gate * up, wd)
     return out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
 
 

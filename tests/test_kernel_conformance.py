@@ -274,3 +274,113 @@ def test_ssd_chunk_property(L, H, P, N, seed):
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(st_got), np.asarray(st_want),
                                rtol=2e-4, atol=2e-4)
+
+
+# =====================================================================
+# fused decode-path megakernel (in-kernel A8 + blend epilogue)
+# =====================================================================
+def _fused_case(seed, M, K, N, transpose=False):
+    from repro.core.photonic import a8_scale
+    from repro.core.prepared import quantize_weight, quantize_weight_t
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    wshape = (N, K) if transpose else (K, N)
+    w = jax.random.normal(k2, wshape, jnp.float32)
+    wq, ws = (quantize_weight_t(w) if transpose else quantize_weight(w))
+    return x, wq, ws, a8_scale(x)
+
+
+@pytest.mark.parametrize("M,K,N", EDGE_SHAPES)
+@pytest.mark.parametrize("bm,bk,bn", BLOCKS)
+@pytest.mark.parametrize("transpose", [False, True])
+def test_fused_padding_grid(M, K, N, bm, bk, bn, transpose):
+    from repro.kernels.photonic_mvm import photonic_mvm_fused
+    x, wq, ws, xs = _fused_case(M * 5 + K + N, M, K, N, transpose)
+    got = photonic_mvm_fused(x, wq, xs, ws, bm=bm, bk=bk, bn=bn,
+                             transpose=transpose, interpret=True)
+    want = ref.photonic_mvm_fused_ref(x, wq, xs, ws, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("nblk,block,act", [(4, 16, "relu"), (8, 8, "silu"),
+                                            (2, 32, "none")])
+@pytest.mark.parametrize("M", [1, 3, 16, 130])
+def test_fused_epilogue_vs_separate_blend(nblk, block, act, M):
+    """Fused bias+activation+shuffle epilogue vs the split two-kernel
+    pipeline across ragged row counts; bit-identity holds without bias,
+    ulp-tolerance with (the fma note in photonic_mvm._finalize)."""
+    from repro.kernels.photonic_mvm import photonic_mvm_fused
+    K = 48
+    N = nblk * block
+    x, wq, ws, xs = _fused_case(M + nblk * block, M, K, N)
+    bias = jax.random.normal(jax.random.PRNGKey(2), (N,), jnp.float32)
+    perm = tuple(int(v) for v in
+                 np.random.default_rng(M).permutation(nblk))
+    got = photonic_mvm_fused(x, wq, xs, ws, bias=bias, bm=8, bk=16, bn=8,
+                             block_perm=perm, block=block, activation=act,
+                             interpret=True)
+    y = ops.photonic_matmul_prepared(x, wq, ws, bm=8, bk=16, bn=8)
+    sep = _blend.blend_shuffle(jnp.asarray(y), bias, perm, block=block,
+                               bm=min(128, ops.round_up(M, 8)),
+                               activation=act, interpret=True)[:M]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(sep),
+                               rtol=1e-6, atol=1e-6)
+    got0 = photonic_mvm_fused(x, wq, xs, ws, bm=8, bk=16, bn=8,
+                              block_perm=perm, block=block, activation=act,
+                              interpret=True)
+    sep0 = _blend.blend_shuffle(jnp.asarray(y), jnp.zeros((N,)), perm,
+                                block=block,
+                                bm=min(128, ops.round_up(M, 8)),
+                                activation=act, interpret=True)[:M]
+    assert np.array_equal(np.asarray(got0), np.asarray(sep0))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_dtypes(dtype):
+    from repro.core.photonic import a8_scale
+    from repro.core.prepared import quantize_weight
+    from repro.kernels.photonic_mvm import photonic_mvm_fused
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 64)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
+    wq, ws = quantize_weight(w)
+    got = photonic_mvm_fused(x, wq, a8_scale(x), ws, bm=8, bk=32, bn=32,
+                             activation="silu", interpret=True,
+                             out_dtype=dtype)
+    assert got.dtype == dtype
+    # the oracle quantizes on x's own grid (bf16 rounds in bf16, exactly
+    # like quantize_symmetric), so only K-accumulation order differs
+    want = ref.photonic_mvm_fused_ref(x, wq, a8_scale(x), ws,
+                                      activation="silu")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(m=st.integers(1, 80), k=st.integers(1, 80), n=st.integers(1, 80),
+       transpose=st.booleans(), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_fused_property(m, k, n, transpose, seed):
+    from repro.kernels.photonic_mvm import photonic_mvm_fused, tile_plan
+    x, wq, ws, xs = _fused_case(seed, m, k, n, transpose)
+    bm, bk, bn = tile_plan(m, k, n, cap_k=256, cap_n=256)
+    got = photonic_mvm_fused(x, wq, xs, ws, bm=bm, bk=bk, bn=bn,
+                             transpose=transpose, interpret=True)
+    want = ref.photonic_mvm_fused_ref(x, wq, xs, ws, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_backend_adaptive_plan_matches_fixed_numerics():
+    """Different tile plans reorder the fp32 K-accumulation, so adaptive
+    and fixed plans agree to reduction tolerance (and each is internally
+    bit-stable: fused == split at ITS plan, covered elsewhere)."""
+    from repro.core.backend import Backend
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 192), jnp.float32)
+    ya = Backend("photonic").dot(x, w)
+    yf = Backend("photonic", bm=128, bk=128, bn=128, adaptive=False,
+                 fused=False).dot(x, w)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yf),
+                               rtol=1e-5, atol=1e-4)

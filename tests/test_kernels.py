@@ -230,3 +230,147 @@ def test_ssd_chunk_composes_to_full_ssd():
                                rtol=5e-4, atol=5e-4)
     np.testing.assert_allclose(np.asarray(hT.transpose(0, 1, 3, 2)),
                                np.asarray(hT_want), rtol=5e-4, atol=5e-4)
+
+
+# ======================================================================
+# fused decode-path megakernel (ISSUE 4)
+# ======================================================================
+def _fused_operands(key, M, K, N, transpose=False):
+    from repro.core.photonic import a8_scale
+    from repro.core.prepared import quantize_weight, quantize_weight_t
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    if transpose:
+        w = jax.random.normal(k2, (N, K), jnp.float32)
+        wq, ws = quantize_weight_t(w)
+    else:
+        w = jax.random.normal(k2, (K, N), jnp.float32)
+        wq, ws = quantize_weight(w)
+    return x, wq, ws, a8_scale(x)
+
+
+@pytest.mark.parametrize("M", [1, 2, 3, 7, 128, 130])
+@pytest.mark.parametrize("transpose", [False, True])
+def test_fused_ragged_m_sweep(M, transpose):
+    """The serving-width sweep: fused megakernel vs oracle at every ragged
+    row count, with the shape-adaptive tile plan."""
+    from repro.kernels.photonic_mvm import photonic_mvm_fused, tile_plan
+    K, N = 96, 64
+    x, wq, ws, xs = _fused_operands(jax.random.PRNGKey(M), M, K, N,
+                                    transpose)
+    bm, bk, bn = tile_plan(M, K, N)
+    got = photonic_mvm_fused(x, wq, xs, ws, bm=bm, bk=bk, bn=bn,
+                             transpose=transpose, interpret=True)
+    want = ref.photonic_mvm_fused_ref(x, wq, xs, ws, transpose=transpose)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("M", [1, 2, 7, 130])
+def test_fused_in_kernel_quant_bit_identical(M):
+    """In-kernel A8 quantization == quantize-outside + int8 kernel, at the
+    same tile plan — bit-for-bit."""
+    from repro.core.photonic import quantize_symmetric
+    from repro.kernels.photonic_mvm import photonic_mvm_fused
+    K, N = 64, 48
+    x, wq, ws, xs = _fused_operands(jax.random.PRNGKey(M + 50), M, K, N)
+    got = photonic_mvm_fused(x, wq, xs, ws, bm=8, bk=32, bn=16,
+                             interpret=True)
+    xq, xs2 = quantize_symmetric(x, 8)
+    split = photonic_mvm(xq, wq, xs2, ws, bm=8, bk=32, bn=16,
+                         interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(split))
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "silu"])
+def test_fused_epilogue_bit_identical_to_separate_blend(act):
+    """Fused blend epilogue (activation + blocked output shuffle) ==
+    separate MVM kernel + blend kernel, bit-for-bit at the same plan."""
+    from repro.kernels.photonic_mvm import photonic_mvm_fused
+    M, K, N, block = 5, 64, 64, 16
+    x, wq, ws, xs = _fused_operands(jax.random.PRNGKey(11), M, K, N)
+    perm = tuple(int(v) for v in
+                 np.random.default_rng(1).permutation(N // block))
+    got = photonic_mvm_fused(x, wq, xs, ws, bm=8, bk=32, bn=16,
+                             block_perm=perm, block=block, activation=act,
+                             interpret=True)
+    y = ops.photonic_matmul_prepared(x, wq, ws, bm=8, bk=32, bn=16)
+    sep = ops.blend_shuffle(y, jnp.zeros((N,)), perm, block=block,
+                            activation=act)
+    assert np.array_equal(np.asarray(got), np.asarray(sep))
+
+
+def test_fused_bias_one_ulp_of_separate():
+    """The fused bias add rides the TIA-rescale fma (XLA contracts the
+    mul+add pair), landing within 1 ulp of the split path's store+add."""
+    from repro.kernels.photonic_mvm import photonic_mvm_fused
+    M, K, N = 5, 64, 64
+    x, wq, ws, xs = _fused_operands(jax.random.PRNGKey(13), M, K, N)
+    bias = jax.random.normal(jax.random.PRNGKey(3), (N,), jnp.float32)
+    got = photonic_mvm_fused(x, wq, xs, ws, bias=bias, bm=8, bk=32, bn=32,
+                             interpret=True)
+    y = ops.photonic_matmul_prepared(x, wq, ws, bm=8, bk=32, bn=32)
+    want = ref.blend_shuffle_ref(y, bias, np.arange(1), N,
+                                 activation="none")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_blend_shuffle_ragged_channels_raises():
+    """C % block != 0 used to silently mis-slice; now a clear ValueError
+    (ISSUE-4 satellite)."""
+    from repro.kernels.blend import blend_shuffle as raw_blend
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 36))
+    bias = jnp.zeros((36,))
+    with pytest.raises(ValueError, match="multiple of block"):
+        raw_blend(x, bias, np.arange(4), block=8, interpret=True)
+    with pytest.raises(ValueError, match="permutation"):
+        raw_blend(x, bias, np.arange(2), block=12, interpret=True)
+
+
+def test_tile_plan_shapes():
+    """Shape-adaptive plan: decode widths round to the 8-row sublane, whole
+    aligned axes collapse to one grid step, unaligned axes keep the largest
+    non-padding tile."""
+    from repro.kernels.photonic_mvm import tile_plan
+    assert tile_plan(2, 512, 1024) == (8, 512, 512)
+    assert tile_plan(1, 64, 64) == (8, 128, 128)       # lane-rounded
+    assert tile_plan(130, 512, 512) == (128, 512, 512)
+    assert tile_plan(8, 640, 1280) == (8, 128, 256)    # largest divisor
+    assert tile_plan(16, 512, 512, cap_k=128, cap_n=128) == (16, 128, 128)
+
+
+def test_resident_bm_rounds_to_sublane():
+    """reuse_resident_matmul_prepared clamps bm to the serving width but
+    keeps it a multiple of 8 (ISSUE-4 satellite): 2-row streams still run
+    MXU-aligned 8-row tiles, and the result matches the oracle."""
+    from repro.core.prepared import quantize_weight
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 40))   # 2-row stream
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 24))
+    wq, ws = quantize_weight(w)
+    got = ops.reuse_resident_matmul_prepared(x, wq, ws, bm=128, bn=24)
+    want = jnp.stack([ops.photonic_matmul_kernel(x[t], w, bm=8, bk=40, bn=24)
+                      for t in range(3)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_backend_dot_fused_vs_unfused_bit_identical(dtype):
+    """Backend-level gate: the megakernel path and the split pipeline
+    (same adaptive tile plan) produce bit-identical outputs through
+    ``Backend.dot`` — in every activation dtype (the in-kernel A8 grid
+    rounds in the input dtype, exactly like quantize_symmetric), and
+    including the fused silu epilogue."""
+    from repro.core.backend import Backend
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 96)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 64)).astype(dtype)
+    f = Backend("photonic")
+    u = Backend("photonic", fused=False)
+    for kw in ({}, {"activation": "silu"}, {"transpose": True}):
+        w_ = jax.random.normal(jax.random.PRNGKey(2), (64, 96)).astype(
+            dtype) if kw.get("transpose") else w
+        a = f.dot(x, w_, **kw)
+        b = u.dot(x, w_, **kw)
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32)), (dtype, kw)

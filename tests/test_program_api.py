@@ -291,3 +291,45 @@ def test_program_moe_blended_experts_prepared():
     prog = Program.build(cfg, params, execution="photonic")
     np.testing.assert_array_equal(np.asarray(out_old),
                                   np.asarray(prog.generate(toks, 3)))
+
+
+def test_program_fused_vs_unfused_bit_identical(small):
+    """The ISSUE-4 acceptance gate at the Program level: the megakernel
+    serving path (in-kernel A8 + fused epilogues, adaptive tiles) and the
+    split pipeline at the SAME tile plan produce bit-identical logits,
+    prefill and decode."""
+    cfg, params = small
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 1,
+                              cfg.vocab_size)
+    prog_f = Program.build(cfg, params,
+                           execution=backend_lib.Backend("photonic"))
+    prog_u = Program.build(cfg, params,
+                           execution=backend_lib.Backend("photonic",
+                                                         fused=False))
+    lf, cf = prog_f.prefill({"tokens": toks}, 10)
+    lu, cu = prog_u.prefill({"tokens": toks}, 10)
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lu))
+    df, _ = prog_f.decode(toks[:, :1], cf, 8)
+    du, _ = prog_u.decode(toks[:, :1], cu, 8)
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(du))
+
+
+def test_program_fused_vs_unfused_obu_stack():
+    """Same gate through a PRM/OBU stack: the blocked shuffle + transpose
+    orientations ride the fused epilogue bit-identically."""
+    cfg = dataclasses.replace(
+        smoke_variant("deepseek-7b"),
+        reuse=ReuseConfig(num_basic=2, reuse_times=2,
+                          transforms=("identity", "shuffle_transpose"),
+                          shuffle_block=8, seed=1))
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 1,
+                              cfg.vocab_size)
+    out_f = Program.build(
+        cfg, params,
+        execution=backend_lib.Backend("photonic")).generate(toks, 4)
+    out_u = Program.build(
+        cfg, params,
+        execution=backend_lib.Backend("photonic",
+                                      fused=False)).generate(toks, 4)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_u))
