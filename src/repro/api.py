@@ -37,15 +37,18 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.core import backend as backend_lib
 from repro.core import prepared as prepared_lib
 from repro.models import transformer as tfm
+from repro.sharding import partition
 from repro.train.trainer import cross_entropy
 
 NEG_INF = -1e30
@@ -123,6 +126,41 @@ def decode_step_fn(cfg: ModelConfig, *, act_pspec=None, legacy_decode=False,
 
 
 # =========================================================================
+# mesh plumbing (the sharded-execution refactor)
+# =========================================================================
+def _backend_mesh(backend):
+    """The backend's mesh when it actually partitions (> 1 device)."""
+    mesh = getattr(backend, "mesh", None)
+    if mesh is None or mesh.size <= 1:
+        return None
+    return mesh
+
+
+def _constrain_caches(caches, cfg: ModelConfig, backend, B: int, L: int):
+    """Pin the KV/slot cache layout to the partition rules (batch over the
+    data axes, KV heads over "model") so prefill compiles data/tensor-
+    parallel under the backend's mesh.  No-op off-mesh (and on a 1x1 mesh —
+    the bit-identity contract with the unsharded path)."""
+    mesh = _backend_mesh(backend)
+    if mesh is None:
+        return caches
+    sh = partition.cache_shardings(cfg, mesh, B, L)
+    return jax.tree.map(jax.lax.with_sharding_constraint, caches, sh)
+
+
+def _mesh_act_pspec(backend, B: int):
+    """Batch-over-data residual constraint (replicated d_model) for the
+    train/loss cell; None when the batch does not divide the data axes."""
+    mesh = _backend_mesh(backend)
+    if mesh is None:
+        return None
+    dp = partition.dp_size(mesh)
+    if dp <= 1 or B % dp != 0:
+        return None
+    return NamedSharding(mesh, partition.act_pspec(mesh, "replicated"))
+
+
+# =========================================================================
 # module-level jit cells (trace cache shared across all Programs)
 # =========================================================================
 @functools.partial(jax.jit, static_argnames=("cfg", "photonic"))
@@ -141,8 +179,11 @@ def _prefill_cell(bank, batch, last, *, cfg: ModelConfig, backend,
     B = batch["tokens"].shape[0]
     caches = tfm.init_caches(cfg, B, cache_len,
                              dtype=jnp.dtype(cfg.compute_dtype))
+    caches = _constrain_caches(caches, cfg, backend, B, cache_len)
     logits, caches, _ = tfm.forward(bank, cfg, batch, mode="prefill",
-                                    caches=caches, execution=backend)
+                                    caches=caches, execution=backend,
+                                    act_pspec=_mesh_act_pspec(backend, B))
+    caches = _constrain_caches(caches, cfg, backend, B, cache_len)
     return logits[jnp.arange(B), last], caches
 
 
@@ -189,8 +230,9 @@ def _decode_cells(donate: bool):
 @functools.partial(jax.jit, static_argnames=("cfg", "backend"))
 def _loss_cell(bank, batch, *, cfg: ModelConfig, backend):
     TRACE_COUNTS["loss"] += 1
-    logits, _, aux = tfm.forward(bank, cfg, batch, mode="train",
-                                 execution=backend)
+    logits, _, aux = tfm.forward(
+        bank, cfg, batch, mode="train", execution=backend,
+        act_pspec=_mesh_act_pspec(backend, batch["tokens"].shape[0]))
     ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
                        cfg.vocab_size)
     return ce, aux
@@ -211,15 +253,48 @@ class Program:
 
     # ------------------------------------------------------------ building
     @classmethod
-    def build(cls, cfg: ModelConfig, params, *, execution=None) -> "Program":
+    def build(cls, cfg: ModelConfig, params, *, execution=None,
+              mesh=None) -> "Program":
         """Resolve the substrate and prepare the weight banks once.
 
         ``execution`` overrides ``cfg.execution`` ("xla" | "photonic" | a
         ``Backend``); on photonic, every matmul weight is quantized to its
-        int8 bank here — no decode step ever re-derives W8 tiles."""
+        int8 bank here — no decode step ever re-derives W8 tiles.
+
+        ``mesh`` makes the mesh a property of execution: the logical-axis
+        rules (`sharding/partition.py`) resolve to NamedShardings for the
+        params AND the prepared int8 banks (tiles/scales shard with their
+        owning weight's spec), the bank is placed accordingly, and every
+        step cell compiles under that mesh — photonic matmuls run the
+        Pallas kernels per-shard via shard_map (`core/backend.py`), KV/slot
+        caches shard batch-over-data.  ``None`` (the default) and a 1x1
+        mesh (``launch.mesh.single_device_mesh``) are bit-identical to the
+        unsharded path.  Rules that do not divide a concrete dim are
+        REPLICATED, not an error — surfaced here as a one-line warning."""
         bk = backend_lib.resolve(execution if execution is not None else cfg)
+        bk_mesh = getattr(bk, "mesh", None)
+        if mesh is not None and bk_mesh is not None and bk_mesh != mesh:
+            raise ValueError(
+                "Program.build(mesh=...) conflicts with the mesh the "
+                "execution Backend already carries — pass one or the other")
+        if mesh is not None and bk_mesh is None:
+            bk = dataclasses.replace(bk, mesh=mesh)
+        mesh = getattr(bk, "mesh", None)
         bank = _prepare_cell(params, cfg=cfg, photonic=bk.is_photonic)
+        if mesh is not None:
+            report = partition.PartitionReport(dropped=[])
+            sh = partition.bank_shardings(bank, tfm.model_specs(cfg), mesh,
+                                          cfg.fsdp, report)
+            bank = jax.device_put(bank, sh)
+            if report.dropped:
+                warnings.warn(partition.dropped_summary(report),
+                              stacklevel=2)
         return cls(cfg=cfg, backend=bk, bank=bank)
+
+    @property
+    def mesh(self):
+        """The execution mesh (None: unsharded single-device semantics)."""
+        return getattr(self.backend, "mesh", None)
 
     # -------------------------------------------------------------- stats
     def bank_stats(self) -> dict:

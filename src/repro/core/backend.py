@@ -59,19 +59,34 @@ prepared and in-step paths share one quantizer, so they are bit-identical.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import obu
+from repro.core.photonic import a8_scale
+from repro.sharding import partition as _partition
 from repro.core.prepared import (PreparedTensor, quantize_weight,
                                  quantize_weight_t)
 from repro.kernels import ops
 from repro.kernels.photonic_mvm import tile_plan
 
 EXECUTIONS = ("xla", "photonic")
+
+
+def _mesh_dims(mesh):
+    """(data_axes, dp, tp) of a (pod, data, model) / (data, model) mesh."""
+    d_axes = _partition.data_axes(mesh)
+    return d_axes, _partition.dp_size(mesh), int(mesh.shape.get("model", 1))
+
+
+def _data_spec_entry(d_axes):
+    return d_axes if len(d_axes) > 1 else (d_axes[0] if d_axes else None)
 
 
 def _apply_activation(y, activation):
@@ -129,6 +144,9 @@ class Backend:
     bn: int = 512                     # output-column tile cap
     fused: bool = True                # megakernel vs split pipeline
     adaptive: bool = True             # shape-adaptive tile planning
+    mesh: Any = None                  # jax.sharding.Mesh | None — when set
+                                      # (and > 1 device) photonic matmuls run
+                                      # under shard_map on it
 
     def __post_init__(self):
         if self.execution not in EXECUTIONS:
@@ -138,6 +156,13 @@ class Backend:
     @property
     def is_photonic(self) -> bool:
         return self.execution == "photonic"
+
+    @property
+    def mesh_active(self) -> bool:
+        """True when matmuls must be explicitly partitioned: a mesh with
+        more than one device.  A 1x1 mesh (``single_device_mesh``) takes the
+        exact unsharded code path — bit-identical to ``mesh=None``."""
+        return self.mesh is not None and self.mesh.size > 1
 
     # ---------------------------------------------------------- tile plans
     def tile_plan(self, M: int, K: int, N: int) -> tuple:
@@ -213,6 +238,10 @@ class Backend:
         """Shared photonic dispatch: resolve the tile plan from the actual
         operand shapes, then run either the fused megakernel or the split
         quantize -> MVM -> blend pipeline at that same plan."""
+        if self.mesh_active:
+            return self._photonic_matmul_sharded(
+                x, wq, wscale, transpose=transpose, bias=bias,
+                block_perm=block_perm, block=block, activation=activation)
         M = 1
         for d in x.shape[:-1]:
             M *= d
@@ -229,6 +258,91 @@ class Backend:
         y = mm(x, wq, wscale, bm=bm, bk=bk, bn=bn)
         return _epilogue_unfused(y, bias, block_perm, block, activation)
 
+    def _photonic_matmul_sharded(self, x, wq, wscale, *, transpose, bias,
+                                 block_perm, block, activation):
+        """The Pallas MVM under ``shard_map`` on ``self.mesh``.
+
+        XLA cannot auto-partition a ``pallas_call``, so on a real mesh every
+        photonic matmul is explicitly mapped: rows (the leading batch dim)
+        split over the data axes, and the weight splits over "model" by
+        whichever partition rule its shape admits —
+
+          * column-parallel (output channels % tp == 0): each shard runs the
+            kernel on its slice of the output channels, scales and bias
+            sharded alongside; no reduction collective — the sharded output
+            re-joins lazily via GSPMD (reduce-scatter/all-gather chosen
+            downstream).  Blocked output shuffles cross shard boundaries, so
+            they force the replicated-weight path instead.
+          * row-parallel (reduction dim % tp == 0): each shard computes a
+            partial MVM over its K-slice (the offset row splits with it)
+            and a ``psum`` over "model" rejoins them; the blend epilogue
+            runs post-psum.
+          * neither divides: the weight stays replicated (only rows shard).
+
+        The per-tensor A8 scale is computed on the GLOBAL activation before
+        entering shard_map, so every shard quantizes on the same grid the
+        single-device kernel would use."""
+        mesh = self.mesh
+        d_axes, dp, tp = _mesh_dims(mesh)
+        dd = _data_spec_entry(d_axes)
+        K = x.shape[-1]
+        N = wq.shape[-2] if transpose else wq.shape[-1]
+        row_shard = dp > 1 and x.ndim >= 2 and x.shape[0] % dp == 0
+        col_tp = tp > 1 and N % tp == 0 and block_perm is None
+        red_tp = tp > 1 and not col_tp and K % tp == 0
+        bspec = dd if row_shard else None
+        mid = (None,) * (x.ndim - 2)
+        x_spec = P(bspec, *mid, "model" if red_tp else None)
+        if transpose:                             # wq: (N, K)
+            w_spec = P("model" if col_tp else None,
+                       "model" if red_tp else None)
+        else:                                     # wq: (K, N)
+            w_spec = P("model" if red_tp else None,
+                       "model" if col_tp else None)
+        ws_spec = P("model" if col_tp else None)
+        out_spec = P(bspec, *mid, "model" if col_tp else None)
+        in_specs = [x_spec, w_spec, P(), ws_spec]
+        operands = [x, wq, a8_scale(x), wscale]
+        has_bias = bias is not None
+        if has_bias:
+            in_specs.append(P("model" if col_tp else None))
+            operands.append(bias)
+        fused, plan = self.fused, self.tile_plan
+
+        def body(xl, wl, xsl, wsl, *rest):
+            bl = rest[0] if has_bias else None
+            Ml = 1
+            for d in xl.shape[:-1]:
+                Ml *= d
+            Kl = xl.shape[-1]
+            Nl = wl.shape[-2] if transpose else wl.shape[-1]
+            bm, bk, bn = plan(Ml, Kl, Nl)
+            if red_tp:
+                # partial MVM on this K-slice; epilogue after the psum
+                if fused:
+                    y = ops.photonic_matmul_fused(
+                        xl, wl, wsl, x_scale=xsl, transpose=transpose,
+                        activation="none", bm=bm, bk=bk, bn=bn)
+                else:
+                    mm = (ops.photonic_matmul_prepared_t if transpose
+                          else ops.photonic_matmul_prepared)
+                    y = mm(xl, wl, wsl, bm=bm, bk=bk, bn=bn, x_scale=xsl)
+                y = jax.lax.psum(y, "model")
+                return _epilogue_unfused(y, bl, block_perm, block,
+                                         activation)
+            if fused:
+                return ops.photonic_matmul_fused(
+                    xl, wl, wsl, x_scale=xsl, transpose=transpose, bias=bl,
+                    block_perm=block_perm, block=block,
+                    activation=activation or "none", bm=bm, bk=bk, bn=bn)
+            mm = (ops.photonic_matmul_prepared_t if transpose
+                  else ops.photonic_matmul_prepared)
+            y = mm(xl, wl, wsl, bm=bm, bk=bk, bn=bn, x_scale=xsl)
+            return _epilogue_unfused(y, bl, block_perm, block, activation)
+
+        return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=out_spec, check_rep=False)(*operands)
+
     def reuse_dot(self, x_stack, w):
         """T independent activation streams through ONE weight: x_stack
         (T, ..., k) @ w (k, n).  Photonic: the weight is programmed once and
@@ -238,6 +352,9 @@ class Backend:
             return self.reuse_dot_prepared(x_stack, w)
         if not self.is_photonic:
             return obu.blend_dot(x_stack, w, transpose=False)
+        if self.mesh_active:
+            wq, wscale = quantize_weight(w)
+            return self._reuse_dot_sharded(x_stack, wq, wscale)
         bm, _, bn = self.tile_plan(
             int(np.prod(x_stack.shape[1:-1])), x_stack.shape[-1],
             w.shape[-1])
@@ -251,11 +368,39 @@ class Backend:
             w = (prep.wq.astype(jnp.float32)
                  * (prep.scale / 127.0)[..., None, :]).astype(x_stack.dtype)
             return obu.blend_dot(x_stack, w, transpose=False)
+        if self.mesh_active:
+            return self._reuse_dot_sharded(x_stack, prep.wq, prep.scale)
         bm, _, bn = self.tile_plan(
             int(np.prod(x_stack.shape[1:-1])), x_stack.shape[-1],
             prep.shape[-1])
         return ops.reuse_resident_matmul_prepared(
             x_stack, prep.wq, prep.scale, bm=bm, bn=bn)
+
+    def _reuse_dot_sharded(self, x_stack, wq, wscale):
+        """Reuse-resident kernel under shard_map: the programmed bank splits
+        column-parallel over "model" when the output channels divide (each
+        shard keeps its slice VMEM-resident for all T streams); otherwise it
+        stays replicated.  The T activation streams are never split — the
+        whole point of the resident schedule is every stream passing the
+        same programmed tile."""
+        mesh = self.mesh
+        _, _, tp = _mesh_dims(mesh)
+        N = wq.shape[-1]
+        col_tp = tp > 1 and N % tp == 0
+        nspec = "model" if col_tp else None
+        mid = (None,) * (x_stack.ndim - 1)
+        plan = self.tile_plan
+
+        def body(xl, wl, wsl):
+            bm, _, bn = plan(int(np.prod(xl.shape[1:-1])), xl.shape[-1],
+                             wl.shape[-1])
+            return ops.reuse_resident_matmul_prepared(xl, wl, wsl,
+                                                      bm=bm, bn=bn)
+
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(*mid, None), P(None, nspec), P(nspec)),
+            out_specs=P(*mid, nspec), check_rep=False)(x_stack, wq, wscale)
 
     # -------------------------------------------------------------- shuffle
     def shuffle(self, h, perm, block_perm=None, block: int = 0):
@@ -267,6 +412,19 @@ class Backend:
         flavor, or xla backend) the static constant-index gather."""
         if self.is_photonic and block_perm is not None and block > 0:
             bias = jnp.zeros((h.shape[-1],), h.dtype)
+            if self.mesh_active:
+                # the blend kernel permutes the FULL channel axis — keep it
+                # replicated and split only the rows over the data axes
+                mesh = self.mesh
+                d_axes, dp, _ = _mesh_dims(mesh)
+                row_ok = dp > 1 and h.ndim >= 2 and h.shape[0] % dp == 0
+                bspec = _data_spec_entry(d_axes) if row_ok else None
+                hs = P(bspec, *(None,) * (h.ndim - 1))
+                return shard_map(
+                    lambda hl, bl: ops.blend_shuffle(
+                        hl, bl, block_perm, block=block, activation="none"),
+                    mesh=mesh, in_specs=(hs, P(None)), out_specs=hs,
+                    check_rep=False)(h, bias)
             return ops.blend_shuffle(h, bias, block_perm, block=block,
                                      activation="none")
         return obu.apply_channel_permutation(h, perm)

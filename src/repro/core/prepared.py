@@ -149,6 +149,28 @@ class PreparedTensor:
         return PreparedTensor(self.wq[idx], self.scale[idx], self.wq_t[idx],
                               self.scale_t[idx], self.w0_colsum[idx])
 
+    # ------------------------------------------------------------- sharding
+    @classmethod
+    def field_specs(cls, wspec: tuple, ndim: int) -> "PreparedTensor":
+        """Per-field PartitionSpecs from the owning weight's spec.
+
+        ``wspec`` is the fp weight's (possibly trailing-trimmed) spec
+        entries and ``ndim`` its rank.  The tiles shard exactly like the
+        weight they image (``wq_t`` has the SAME array shape — the
+        transposed use is an in-register swap, never a materialized
+        transpose); the per-column gains/checksum (shape ``[..., N]``)
+        follow the last dim's axis and the per-row gains (``[..., K]``)
+        the second-to-last's.  Used by ``sharding.partition.
+        bank_shardings`` so a bank placed on a mesh keeps every field of
+        one programmed tile on the device that owns it."""
+        from jax.sharding import PartitionSpec as P
+
+        entries = list(wspec) + [None] * (ndim - len(wspec))
+        lead, kax, nax = entries[:-2], entries[-2], entries[-1]
+        wfull = P(*entries)
+        return cls(wq=wfull, scale=P(*lead, nax), wq_t=wfull,
+                   scale_t=P(*lead, kax), w0_colsum=P(*lead, nax))
+
 
 def is_prepared(w: Any) -> bool:
     return isinstance(w, PreparedTensor)

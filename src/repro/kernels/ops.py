@@ -26,6 +26,7 @@ Three families of matmul entry points:
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.photonic import a8_scale, quantize_symmetric
 from repro.core.prepared import quantize_weight, quantize_weight_t
@@ -75,14 +76,25 @@ def reuse_resident_matmul(x_stack, w, *, bm=128, bn=128):
 # =========================================================================
 # prepared-bank path (write-once)
 # =========================================================================
+def _quantize_a8(x, x_scale):
+    """Per-tensor A8 of ``x``: derive the scale here (``x_scale=None``) or
+    quantize on a caller-supplied grid — the shard_map'd backend passes the
+    GLOBAL activation's scale so every shard of a partitioned matmul
+    quantizes exactly like the single-device kernel would."""
+    if x_scale is None:
+        return quantize_symmetric(x, 8)
+    q = jnp.clip(jnp.round(x / x_scale), -128.0, 127.0)
+    return q.astype(jnp.int8), x_scale
+
+
 def photonic_matmul_prepared(x, wq, wscale, *, bm=128, bk=128, bn=128,
-                             qmax=127.0):
+                             qmax=127.0, x_scale=None):
     """Offset-decomposed MVM against an already-programmed bank.
 
     wq: int8 (k, n) per-output-channel quantized; wscale: f32 (n,).  Only
     the activations are quantized here — the weight-side work (normalize,
     round, scale derivation) happened once at ``Program.build`` time."""
-    xq, xscale = quantize_symmetric(x, 8)
+    xq, xscale = _quantize_a8(x, x_scale)
     lead = x.shape[:-1]
     x2 = xq.reshape(-1, x.shape[-1])
     y = _pm.photonic_mvm(x2, wq, xscale, wscale.reshape(-1),
@@ -92,9 +104,9 @@ def photonic_matmul_prepared(x, wq, wscale, *, bm=128, bk=128, bn=128,
 
 
 def photonic_matmul_prepared_t(x, wq, wscale, *, bm=128, bk=128, bn=128,
-                               qmax=127.0):
+                               qmax=127.0, x_scale=None):
     """Prepared ``x @ w.T``: wq int8 (n, k) per-ROW quantized; wscale (n,)."""
-    xq, xscale = quantize_symmetric(x, 8)
+    xq, xscale = _quantize_a8(x, x_scale)
     lead = x.shape[:-1]
     x2 = xq.reshape(-1, x.shape[-1])
     y = _pm.photonic_mvm_t(x2, wq, xscale, wscale,
@@ -126,7 +138,7 @@ def reuse_resident_matmul_prepared(x_stack, wq, wscale, *, bm=128, bn=128,
 # =========================================================================
 def photonic_matmul_fused(x, wq, wscale, *, transpose=False, bias=None,
                           block_perm=None, block=0, activation="none",
-                          bm=128, bk=128, bn=128, qmax=127.0):
+                          bm=128, bk=128, bn=128, qmax=127.0, x_scale=None):
     """One-``pallas_call`` serving matmul against a prepared bank.
 
     x: fp (..., k); wq/wscale: a prepared orientation — (k, n)/per-column,
@@ -136,8 +148,10 @@ def photonic_matmul_fused(x, wq, wscale, *, transpose=False, bias=None,
     blend epilogue.  Bit-identical to ``photonic_matmul_prepared*`` followed
     by ``blend_shuffle`` at the same (bm, bk, bn) — except the bias add,
     which XLA contracts into the rescale fma (<= 1 ulp; see
-    ``photonic_mvm._kernel_fused``)."""
-    xscale = a8_scale(x)
+    ``photonic_mvm._kernel_fused``).  ``x_scale`` overrides the A8 scale
+    (the shard_map'd backend passes the global activation's scale so a
+    partitioned matmul's shards all quantize on the single-device grid)."""
+    xscale = a8_scale(x) if x_scale is None else x_scale
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     n_out = wq.shape[0] if transpose else wq.shape[1]

@@ -33,6 +33,19 @@ Two generations of kernels live here:
 Tile sizes come from :func:`tile_plan` (shape-adaptive: decode-width row
 counts round to 8, reduction/column tiles grow to cover small d_model in one
 grid step) rather than hard-coded 128s.
+
+**SPMD contract** (DESIGN.md §Sharded execution): every kernel here is
+rank-LOCAL — it sees one shard's operands and knows nothing about the mesh.
+XLA cannot auto-partition a ``pallas_call``, so on a >1-device mesh
+``core/backend.py`` wraps these calls in ``shard_map`` with the collective
+chosen by the partition rule (column-parallel: no collective, the sharded
+output rejoins via GSPMD; row-parallel: ``psum`` of the per-shard partial —
+valid because the offset row and the per-column TIA scales both commute
+with the K-sum), and resolves :func:`tile_plan` on the LOCAL shapes inside
+the mapped body.  The one piece of global state a shard needs is the
+per-tensor A8 scale: the caller computes it on the global activation and
+threads it through ``kernels/ops.py`` (``x_scale=``) so every shard
+quantizes on exactly the single-device grid.
 """
 from __future__ import annotations
 

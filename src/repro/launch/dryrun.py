@@ -164,9 +164,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
         result["status"] = "SKIP(photonic: inference-only backend)"
         return result
     if mesh_shape is not None:
-        axes = (("pod", "data", "model") if len(mesh_shape) == 3
-                else ("data", "model"))
-        mesh = mesh_lib.make_mesh(tuple(mesh_shape), axes)
+        mesh = mesh_lib.parse_mesh(mesh_shape)
     else:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
@@ -257,6 +255,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
         result["compile_s"] = round(time.time() - t1, 2)
 
     result["dropped_rules"] = [f"{a}:{d}" for a, d, _ in report.dropped[:8]]
+    if report.dropped:
+        # same one-line summary Program.build warns with — misdivided dims
+        # should read identically in the dry-run report and the serving log
+        result["dropped_rules_summary"] = partition.dropped_summary(report)
     # ---- analyses ----
     try:
         mem = compiled.memory_analysis()

@@ -30,6 +30,41 @@ def make_mesh(shape: tuple, axes: tuple):
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
+def parse_mesh(spec):
+    """Mesh from a ``"DxM"`` / ``"PxDxM"`` string (or an int tuple): 2 dims
+    map to ``(data, model)``, 3 to ``(pod, data, model)``.  The single spec
+    parser every CLI entry point (serve / dryrun / shardcheck / benches)
+    shares."""
+    if isinstance(spec, str):
+        shape = tuple(int(x) for x in spec.split("x"))
+    else:
+        shape = tuple(int(x) for x in spec)
+    if len(shape) not in (2, 3) or any(s < 1 for s in shape):
+        raise ValueError(f"mesh spec {spec!r} must be DxM or PxDxM with "
+                         f"positive sizes")
+    axes = (("pod", "data", "model") if len(shape) == 3
+            else ("data", "model"))
+    return make_mesh(shape, axes)
+
+
+def make_mesh_auto(*, max_model: int = 4, devices=None):
+    """Largest ``(data, model)`` mesh the available devices support.
+
+    Unlike :func:`make_production_mesh` this never hard-fails on device
+    count: it uses every device it finds, putting the largest power-of-two
+    factor <= ``max_model`` on "model" (TP wants the fast intra-host links)
+    and the rest on "data".  One device degenerates to
+    :func:`single_device_mesh` — the no-op mesh every entry point accepts.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    model = 1
+    while model * 2 <= max_model and n % (model * 2) == 0:
+        model *= 2
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         devices=devices)
+
+
 def single_device_mesh():
     return jax.make_mesh((1, 1), ("data", "model"),
                          devices=jax.devices()[:1])

@@ -13,11 +13,17 @@ CPU-scale example:
   wave        static aligned waves (fallback; serve/batcher.py)
   engine      one aligned batch straight through Program.generate
 ``--execution`` picks the matmul substrate (xla | photonic).
+``--mesh`` picks the execution mesh: ``auto`` builds the largest
+(data, model) mesh from the available devices (launch/mesh.py), ``DxM``
+(e.g. ``2x2``) pins a shape, omitted = single-device.  The slot pool then
+spans the data axis and TP-sharded matmuls run the Pallas kernels
+per-shard (DESIGN.md §Sharded execution).
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import numpy as np
 
@@ -26,7 +32,9 @@ import jax.numpy as jnp
 
 from repro.api import Program
 from repro.configs import get_arch, smoke_variant
+from repro.launch import mesh as mesh_lib
 from repro.models import transformer as tfm
+from repro.sharding import partition
 from repro.serve.batcher import Request, WaveBatcher
 from repro.serve.scheduler import ContinuousScheduler
 
@@ -74,12 +82,31 @@ def main(argv=None):
     ap.add_argument("--execution", default=None,
                     choices=["xla", "photonic"],
                     help="matmul substrate override (default: cfg.execution)")
+    ap.add_argument("--mesh", default=None,
+                    help="execution mesh: 'auto' (largest (data, model) "
+                         "mesh from available devices), 'DxM' (e.g. 2x2), "
+                         "or omit for single-device")
     args = ap.parse_args(argv)
     cfg = smoke_variant(args.arch) if args.smoke else get_arch(
         args.arch, reuse=args.reuse)
+    mesh = None
+    if args.mesh == "auto":
+        mesh = mesh_lib.make_mesh_auto()
+    elif args.mesh:
+        mesh = mesh_lib.parse_mesh(args.mesh)
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
-    # compile once: backend + (photonic) prepared weight banks
-    prog = Program.build(cfg, params, execution=args.execution)
+    # compile once: backend + (photonic) prepared weight banks + mesh —
+    # surfacing any partition rules that were dropped (replicated) so
+    # misdivided dims are visible in the serving log
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        prog = Program.build(cfg, params, execution=args.execution,
+                             mesh=mesh)
+    for w in caught:
+        print(f"[serve] WARNING {w.message}")
+    if mesh is not None:
+        print(f"[serve] execution mesh {dict(mesh.shape)} "
+              f"({mesh.size} devices)")
     if prog.backend.is_photonic:
         st = prog.bank_stats()
         print(f"[serve] photonic banks prepared once: "
@@ -109,8 +136,16 @@ def main(argv=None):
         sched = WaveBatcher(prog, wave_size=args.capacity,
                             temperature=args.temperature)
     else:
+        capacity = args.capacity
+        if mesh is not None:
+            # one per-shard sub-batch per data shard: round capacity up
+            dp = partition.dp_size(mesh)
+            capacity = -(-capacity // dp) * dp
+            if capacity != args.capacity:
+                print(f"[serve] capacity {args.capacity} -> {capacity} "
+                      f"(divides over {dp} data shard(s))")
         sched = ContinuousScheduler(
-            prog, capacity=args.capacity,
+            prog, capacity=capacity,
             max_len=args.max_prompt + args.new_tokens,
             temperature=args.temperature)
     for r in reqs:

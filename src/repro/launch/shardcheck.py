@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_SHARD_DEVICES", "8"))
+
+DOC = """Sharded-vs-single-device parity checker (run in a fresh process).
+
+Forces host-platform devices *before* importing jax (same trick as
+launch/dryrun.py), then runs the mesh-native execution path end to end on a
+small model and gates it against the single-device reference:
+
+  * ``--mesh DxM`` — build a (data, model) host mesh, run Program prefill +
+    decode through it, and require rel-L2 <= --tol (the established W8A8
+    parity bound, 0.055) against the UNSHARDED reference program;
+  * a 1x1 mesh must be BIT-identical to the unsharded path, and repeated
+    sharded steps must not retrace (the api.TRACE_COUNTS gate);
+  * ``--serve`` — data-parallel continuous batching over the mesh: greedy
+    completions must be token-identical to unsharded solo generation;
+  * ``--check-dropped`` — a deliberately misdivided dim must surface the
+    one-line PartitionReport warning from Program.build.
+
+Usage (tests/test_sharded_backend.py and the CI sharded-smoke job):
+  REPRO_SHARD_DEVICES=8 python -m repro.launch.shardcheck \\
+      --mesh 2x2 --execution photonic --serve
+"""
+
+import argparse  # noqa: E402  (XLA_FLAGS must precede all jax imports)
+import sys
+import warnings
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.api import Program
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as tfm
+from repro.sharding import partition
+
+
+def _rel_l2(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+def small_cfg(**kw):
+    return ModelConfig(name="shard-t", family="dense", num_layers=2,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=128, compute_dtype="float32", **kw)
+
+
+def check_parity(mesh_shape, execution: str, tol: float) -> list:
+    """Sharded Program vs unsharded reference on one mesh shape."""
+    fails = []
+    cfg = small_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S, L = 4, 8, 14
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1,
+                              cfg.vocab_size)
+    ref = Program.build(cfg, params, execution=execution)
+    lr, cr = ref.prefill({"tokens": toks}, L)
+    dr, _ = ref.decode(toks[:, :1], cr, S)
+
+    mesh = mesh_lib.parse_mesh(mesh_shape)
+    prog = Program.build(cfg, params, execution=execution, mesh=mesh)
+    lp, cp = prog.prefill({"tokens": toks}, L)
+    dp_, cp = prog.decode(toks[:, :1], cp, S)
+    rel_p, rel_d = _rel_l2(lp, lr), _rel_l2(dp_, dr)
+    print(f"[shardcheck] mesh {dict(mesh.shape)} {execution}: "
+          f"prefill rel-L2 {rel_p:.5f}, decode rel-L2 {rel_d:.5f} "
+          f"(tol {tol})")
+    if rel_p > tol or rel_d > tol:
+        fails.append(f"parity {mesh_shape}: rel-L2 prefill {rel_p:.5f} / "
+                     f"decode {rel_d:.5f} > {tol}")
+
+    # repeated sharded steps must hit the shared jit cells — no retrace
+    before = dict(api.TRACE_COUNTS)
+    l2, c2 = prog.prefill({"tokens": toks}, L)
+    _, c2 = prog.decode(toks[:, :1], c2, S)
+    prog2 = Program.build(cfg, params, execution=execution, mesh=mesh)
+    prog2.prefill({"tokens": toks}, L)
+    if dict(api.TRACE_COUNTS) != before:
+        fails.append(f"retrace on repeated sharded calls: "
+                     f"{before} -> {dict(api.TRACE_COUNTS)}")
+    del l2
+
+    # the 1x1 mesh is the no-op default: BIT-identical to unsharded
+    one = Program.build(cfg, params, execution=execution,
+                        mesh=mesh_lib.single_device_mesh())
+    lo, co = one.prefill({"tokens": toks}, L)
+    do, _ = one.decode(toks[:, :1], co, S)
+    if not (np.array_equal(np.asarray(lo), np.asarray(lr))
+            and np.array_equal(np.asarray(do), np.asarray(dr))):
+        fails.append("1x1 mesh not bit-identical to the unsharded path")
+    else:
+        print("[shardcheck] 1x1 mesh bit-identical to unsharded: ok")
+    return fails
+
+
+def check_serve(mesh_shape, execution: str) -> list:
+    """DP continuous batching over the mesh == unsharded solo generate."""
+    from repro.serve.batcher import Request
+    from repro.serve.scheduler import ContinuousScheduler
+
+    fails = []
+    cfg = small_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = mesh_lib.parse_mesh(mesh_shape)
+    dp = partition.dp_size(mesh)
+    prog = Program.build(cfg, params, execution=execution, mesh=mesh)
+    sched = ContinuousScheduler(prog, capacity=max(4, dp), max_len=24)
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=rid,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(3, 9))
+                                        ).astype(np.int32),
+                    max_new=int(rng.integers(2, 5)))
+            for rid in range(6)]
+    for r in reqs:
+        sched.submit(r)
+    comps = {c.rid: c for c in sched.drain()}
+    ref = Program.build(cfg, params, execution=execution)
+    bad = []
+    for r in reqs:
+        solo = np.asarray(ref.generate(jnp.asarray(r.prompt)[None, :],
+                                       r.max_new))[0]
+        if not np.array_equal(comps[r.rid].tokens, solo):
+            bad.append(r.rid)
+    if bad:
+        fails.append(f"DP serving tokens diverge from solo generate: "
+                     f"rids {bad}")
+    else:
+        print(f"[shardcheck] DP serving over {dict(mesh.shape)}: "
+              f"{len(reqs)} requests token-identical to solo generate")
+    return fails
+
+
+def check_dropped() -> list:
+    """A misdivided dim must surface the one-line replication warning."""
+    # 30 head channels / 90-wide d_ff do not divide a 4-wide model axis ->
+    # those rules drop to replicated and Program.build must say so
+    cfg = ModelConfig(
+        name="shard-drop", family="dense", num_layers=2, d_model=30,
+        num_heads=3, num_kv_heads=3, d_ff=90, vocab_size=128,
+        compute_dtype="float32")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    mesh = mesh_lib.make_mesh((1, 4), ("data", "model"))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        Program.build(cfg, params, mesh=mesh)
+    msgs = [str(w.message) for w in caught
+            if "rule(s) dropped" in str(w.message)]
+    if not msgs:
+        return ["no dropped-rule warning from Program.build on a "
+                "misdivided mesh"]
+    print(f"[shardcheck] dropped-rule warning surfaced: {msgs[0]}")
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--mesh", default="1x2",
+                    help="data x model (x pod leading for 3 dims)")
+    ap.add_argument("--execution", default="photonic",
+                    choices=["xla", "photonic"])
+    ap.add_argument("--tol", type=float, default=0.055)
+    ap.add_argument("--serve", action="store_true",
+                    help="also gate DP continuous serving token-identity")
+    ap.add_argument("--check-dropped", action="store_true",
+                    help="also gate the PartitionReport warning")
+    args = ap.parse_args(argv)
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+    fails = check_parity(mesh_shape, args.execution, args.tol)
+    if args.serve:
+        fails += check_serve(mesh_shape, args.execution)
+    if args.check_dropped:
+        fails += check_dropped()
+    for f in fails:
+        print(f"[shardcheck] FAIL {f}")
+    print(f"[shardcheck] {'FAIL' if fails else 'ok'}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,14 +70,15 @@ def sample(logits, vocab_size: int, key=None, temperature: float = 0.0):
 
 def generate(params, cfg: ModelConfig, prompt, max_new: int, *,
              extras=None, temperature: float = 0.0, seed: int = 0,
-             execution=None):
+             execution=None, mesh=None):
     """Host-side autoregressive loop (examples / tests).
 
     prompt: (B, S) int32.  Returns (B, S + max_new).
 
     Deprecated shim over ``Program.generate``: builds the Program (backend
-    resolution + prepared banks) per call, then serves every token from the
-    pre-jitted module-level cells — no per-call jit-closure rebuild."""
-    prog = api.Program.build(cfg, params, execution=execution)
+    resolution + prepared banks + optional execution mesh) per call, then
+    serves every token from the pre-jitted module-level cells — no per-call
+    jit-closure rebuild."""
+    prog = api.Program.build(cfg, params, execution=execution, mesh=mesh)
     return prog.generate(prompt, max_new, extras=extras,
                          temperature=temperature, seed=seed)

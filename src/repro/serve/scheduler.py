@@ -150,6 +150,12 @@ class ContinuousScheduler:
     request: prompts are left-aligned at position 0 of their slot, prefill
     pads only to a compile bucket on the *right* (causally invisible), and
     decode masks every row at its own position.
+
+    A Program built with ``mesh=`` makes serving data-parallel: the slot
+    pool's batch axis spans the mesh's data shards (capacity must divide),
+    admission packs per-shard sub-batches, and each decode step runs every
+    shard's sub-batch concurrently under GSPMD — same host-side loop, same
+    greedy tokens.
     """
 
     def __init__(self, params, cfg: Optional[ModelConfig] = None, *,
@@ -158,6 +164,7 @@ class ContinuousScheduler:
                  temperature: float = 0.0, seed: int = 0,
                  prefill_bucket: int = 16,
                  admission: Optional[ReuseAwareAdmission] = None,
+                 mesh=None,
                  on_token: Optional[Callable[[int, int], None]] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None):
         # compile-once entry: pass a prebuilt ``api.Program`` as the first
@@ -169,12 +176,19 @@ class ContinuousScheduler:
             if cfg is not None and cfg != params.cfg:
                 raise ValueError("pass either a Program or (params, cfg), "
                                  "not a Program plus a different cfg")
+            if mesh is not None and mesh != self.program.mesh:
+                # a pool sharded on a mesh the Program's cells don't know
+                # about would feed mesh-sharded caches into unsharded
+                # pallas_calls — build the Program with the mesh instead
+                raise ValueError(
+                    "mesh= conflicts with the Program's execution mesh; "
+                    "build it with Program.build(..., mesh=mesh)")
             cfg = self.program.cfg
         else:
             if cfg is None:
                 raise ValueError("ContinuousScheduler(params, cfg) needs "
                                  "the model config")
-            self.program = api.Program.build(cfg, params)
+            self.program = api.Program.build(cfg, params, mesh=mesh)
         self.cfg = cfg
         self.pad_id = pad_id
         self.temperature = temperature
@@ -182,7 +196,11 @@ class ContinuousScheduler:
         self.admission = admission or ReuseAwareAdmission.build(cfg)
         self.on_token = on_token
         self.on_complete = on_complete
-        self.pool = SlotPool(cfg, capacity, max_len)
+        # data-parallel serving: the slot pool spans the data axes of the
+        # Program's execution mesh, and allocation packs per-shard
+        # sub-batches — see serve/slots.py
+        self.mesh = self.program.mesh
+        self.pool = SlotPool(cfg, capacity, max_len, mesh=self.mesh)
         # Right-padding a prefill is causally invisible to attention (masked
         # by the slot position) but NOT to recurrent state: SSM ``h`` and the
         # conv tail integrate every input token.  Models with SSM layers

@@ -14,6 +14,14 @@ The pool is deliberately model-agnostic: any cache leaf written by prefill
 with batch 1 and length <= L inserts via one ``dynamic_update_slice`` at
 ``(0, 0, slot, 0, ...)`` — KV buffers, MLA latents, SSM states and conv
 tails, and cross-attention memory all share that shape contract.
+
+**Data-parallel pools** (the mesh-native refactor): with ``mesh=`` set, the
+slot axis ``B`` spans the mesh's data axes — the pool cache is placed with
+the partition rules' cache shardings (batch over "data", KV heads over
+"model") and every decode step runs one per-shard sub-batch per data shard.
+Slot *packing* becomes shard-aware: ``allocate`` balances active slots
+across the ``dp`` contiguous shard blocks (least-loaded shard first), so
+admitted work spreads over the data axis instead of piling onto shard 0.
 """
 from __future__ import annotations
 
@@ -27,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
+from repro.sharding import partition
 
 
 @dataclasses.dataclass
@@ -53,14 +62,28 @@ class SlotPool:
     """
 
     def __init__(self, cfg: ModelConfig, capacity: int, max_len: int,
-                 dtype=None):
+                 dtype=None, mesh=None):
         if capacity < 1 or max_len < 2:
             raise ValueError("need capacity >= 1 and max_len >= 2")
         self.cfg = cfg
         self.capacity = capacity
         self.max_len = max_len
+        self.mesh = mesh
+        self.dp = 1
+        if mesh is not None and mesh.size > 1:
+            self.dp = partition.dp_size(mesh)
+            if capacity % self.dp != 0:
+                raise ValueError(
+                    f"slot capacity {capacity} must divide over the mesh's "
+                    f"{self.dp} data shard(s) (one per-shard sub-batch each)")
         dtype = dtype or jnp.dtype(cfg.compute_dtype)
         self.caches = tfm.init_caches(cfg, capacity, max_len, dtype=dtype)
+        if mesh is not None and mesh.size > 1:
+            # the pool IS the decode batch: place it once with the rule-
+            # derived cache shardings (batch over data, KV heads over model)
+            self.caches = jax.device_put(
+                self.caches,
+                partition.cache_shardings(cfg, mesh, capacity, max_len))
         # next write position per slot; clamped to max_len - 1 so a full
         # slot's delta write lands in-bounds (and is masked on read)
         self.positions = np.zeros(capacity, np.int32)
@@ -80,11 +103,26 @@ class SlotPool:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
     def allocate(self, state: SlotState) -> int:
-        """Claim the lowest-index free slot for ``state``."""
+        """Claim a free slot for ``state``.
+
+        Single-shard pools (``dp == 1``) hand out the lowest free index
+        (left-aligned packing).  Data-parallel pools pack per-shard
+        sub-batches instead: the slot comes from the least-loaded of the
+        ``dp`` contiguous shard blocks (ties -> lowest shard), lowest index
+        within it — active slots stay balanced across the data axis."""
         if not self._free:
             raise RuntimeError("slot pool exhausted")
         self._free.sort()
-        slot = self._free.pop(0)
+        if self.dp <= 1:
+            slot = self._free.pop(0)
+        else:
+            per = self.capacity // self.dp
+            free_by_shard = [[s for s in self._free if s // per == i]
+                             for i in range(self.dp)]
+            shard = min((i for i in range(self.dp) if free_by_shard[i]),
+                        key=lambda i: per - len(free_by_shard[i]))
+            slot = free_by_shard[shard][0]
+            self._free.remove(slot)
         self.slots[slot] = state
         return slot
 

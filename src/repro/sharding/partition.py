@@ -27,6 +27,12 @@ def data_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def dp_size(mesh: Mesh) -> int:
+    """Total data-parallel degree: the product of the data axes' sizes."""
+    d = data_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in d])) if d else 1
+
+
 def base_rules(mesh: Mesh, fsdp: bool) -> dict:
     d = data_axes(mesh)
     rules = {
@@ -82,10 +88,11 @@ def spec_for(axes: tuple, shape: tuple, mesh: Mesh, rules: dict,
     return P(*entries)
 
 
-def _map_with_specs(fn, params: Any, specs: Any) -> Any:
+def _map_with_specs(fn, params: Any, specs: Any, is_leaf=None) -> Any:
     """tree.map over params with the parallel spec tree navigated by path
     (spec leaves are tuples, which jax would treat as pytree nodes)."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params,
+                                                         is_leaf=is_leaf)
     out = []
     for path, leaf in flat:
         ax = specs
@@ -104,6 +111,50 @@ def param_shardings(param_shapes: Any, specs: Any, mesh: Mesh, fsdp: bool,
             mesh, spec_for(tuple(ax), tuple(leaf.shape), mesh, rules,
                            report)),
         param_shapes, specs)
+
+
+def dropped_summary(report: PartitionReport, limit: int = 6) -> str:
+    """One-line human summary of rules silently replicated by ``spec_for``
+    (a mesh axis that does not divide a concrete dim).  Surfaced by
+    ``Program.build`` and ``launch/serve.py`` so misdivided dims stop being
+    invisible."""
+    items = [f"{ax}:{dim}%{'x'.join(str(m) for m in mapped)}"
+             for ax, dim, mapped in report.dropped[:limit]]
+    more = len(report.dropped) - len(items)
+    tail = f" (+{more} more)" if more > 0 else ""
+    return (f"sharding: {len(report.dropped)} rule(s) dropped — replicated "
+            f"instead of sharded: {', '.join(items)}{tail}")
+
+
+# ------------------------------------------------------------ prepared banks
+def bank_shardings(bank: Any, specs: Any, mesh: Mesh, fsdp: bool,
+                   report: PartitionReport | None = None) -> Any:
+    """NamedSharding tree for a ``Program.build`` bank whose matmul leaves
+    may be ``core.prepared.PreparedTensor`` banks.
+
+    A prepared leaf's tiles and scales shard WITH their owning weight's
+    logical spec: ``wq``/``wq_t`` (same array shape as the fp weight) take
+    the weight's spec verbatim; ``scale``/``w0_colsum`` (shape
+    ``w.shape[:-2] + (w.shape[-1],)``) keep the leading entries plus the
+    last dim's axis; ``scale_t`` (``w.shape[:-2] + (w.shape[-2],)``) keeps
+    the leading entries plus the second-to-last dim's axis.  Plain fp leaves
+    shard exactly like :func:`param_shardings`."""
+    from repro.core.prepared import PreparedTensor
+
+    rules = base_rules(mesh, fsdp)
+
+    def one(leaf, ax):
+        ax = tuple(ax)
+        if isinstance(leaf, PreparedTensor):
+            wspec = spec_for(ax, tuple(leaf.wq.shape), mesh, rules, report)
+            fields = PreparedTensor.field_specs(tuple(wspec), leaf.wq.ndim)
+            return jax.tree.map(lambda p: NamedSharding(mesh, p), fields,
+                                is_leaf=lambda x: isinstance(x, P))
+        return NamedSharding(
+            mesh, spec_for(ax, tuple(leaf.shape), mesh, rules, report))
+
+    return _map_with_specs(one, bank, specs,
+                           is_leaf=lambda x: isinstance(x, PreparedTensor))
 
 
 def tree_pspecs(param_shapes: Any, specs: Any, mesh: Mesh, fsdp: bool) -> Any:
