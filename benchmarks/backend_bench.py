@@ -177,6 +177,9 @@ def bench_prepared_decode(reps: int, details: dict):
     from repro.configs.base import ModelConfig
     from repro.core.backend import Backend
     from repro.models import transformer as tfm
+    from repro.obs import metrics as metrics_lib
+    from repro.obs.check_schema import validate as validate_schema
+    from repro.obs.serving import ServingObs
     from repro.serve import engine
 
     cfg = ModelConfig(name="prepared-bench-lm", family="dense",
@@ -209,8 +212,20 @@ def bench_prepared_decode(reps: int, details: dict):
 
     prog_f = Program.build(cfg, params, execution=bk_fused)
     _, fcaches = prog_f.prefill(batch, S + 1)
-    us_fused, out_fused, _ = _time_decode_us(
+    us_fused, out_fused, fcaches = _time_decode_us(
         lambda ca: prog_f.decode(b1["tokens"], ca, S), fcaches, reps)
+
+    # telemetry-overhead gate: the SAME fused decode with the hot-path
+    # metrics switch ON (Program step counters recording per call), then
+    # off again — overhead is measured against the best disabled run so a
+    # noisy shared runner can only over-report it
+    metrics_lib.enable()
+    us_fused_on, _, fcaches = _time_decode_us(
+        lambda ca: prog_f.decode(b1["tokens"], ca, S), fcaches, reps)
+    metrics_lib.disable()
+    us_fused_off2, _, fcaches = _time_decode_us(
+        lambda ca: prog_f.decode(b1["tokens"], ca, S), fcaches, reps)
+    metrics_overhead = us_fused_on / min(us_fused, us_fused_off2) - 1.0
 
     # bit-identity comparator: split pipeline at the SAME adaptive plan
     prog_s = Program.build(cfg, params, execution=bk_split)
@@ -221,14 +236,32 @@ def bench_prepared_decode(reps: int, details: dict):
     fused_identical = bool(jnp.all(out_fused == out_split))
     speedup = us_legacy / us_prep
     fused_speedup = us_prep / us_fused
+    # the shared metrics snapshot (schema'd like live serving): account the
+    # measured trace on the meter — one prefill of B*S rows, then the timed
+    # decode steps of B lanes each — and fold in the trace-time kernel-call
+    # ledger the three Program builds recorded
+    obs = ServingObs.create(cfg, trace=False)
+    obs.meter.on_prefill(B * S)
+    for _ in range(3 * (reps + 1)):       # three timed fused chains ran
+        obs.meter.on_decode_step(B)
+    snap = obs.snapshot()
+    schema_path = os.path.join(os.path.dirname(__file__),
+                               "metrics_schema.json")
+    with open(schema_path) as f:
+        errs = validate_schema(snap, json.load(f))
+    assert not errs, f"metrics snapshot violates metrics_schema.json: {errs}"
+
     details["prepared_decode"] = {
         "model": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
                   "num_layers": cfg.num_layers, "B": B},
         "requantize_us": us_legacy, "prepared_us": us_prep,
         "fused_us": us_fused,
+        "metrics_enabled_us": us_fused_on,
+        "metrics_overhead_frac": metrics_overhead,
         "speedup": speedup, "logits_bit_identical": identical,
         "fused_speedup_vs_prepared": fused_speedup,
-        "fused_vs_split_bit_identical": fused_identical}
+        "fused_vs_split_bit_identical": fused_identical,
+        "metrics": snap}
     return details["prepared_decode"]
 
 
@@ -287,6 +320,8 @@ def write_bench_decode(details: dict, path: str = "BENCH_decode.json"):
         "requantize_us": pd["requantize_us"],
         "prepared_us": pd["prepared_us"],
         "fused_us": pd["fused_us"],
+        "metrics_enabled_us": pd["metrics_enabled_us"],
+        "metrics_overhead_frac": pd["metrics_overhead_frac"],
         "prepared_speedup_vs_requantize": pd["speedup"],
         "fused_speedup_vs_prepared": pd["fused_speedup_vs_prepared"],
         "logits_bit_identical_requantize_vs_prepared":
@@ -294,6 +329,7 @@ def write_bench_decode(details: dict, path: str = "BENCH_decode.json"):
         "logits_bit_identical_fused_vs_split":
             pd["fused_vs_split_bit_identical"],
         "model": pd["model"],
+        "metrics": pd["metrics"],
     }
     if "sharded_decode" in details:
         sd = details["sharded_decode"]
@@ -383,6 +419,9 @@ def _print_decode_ladder(pd: dict):
           f"{pd['fused_speedup_vs_prepared']:.2f}x over prepared "
           f"{pd['prepared_us']:.1f}us (megakernel; fused==split logits: "
           f"{pd['fused_vs_split_bit_identical']})", flush=True)
+    print(f"fused_decode_metrics_on,{pd['metrics_enabled_us']:.1f},"
+          f"telemetry overhead {pd['metrics_overhead_frac']:+.1%} "
+          f"(budget <= 5%)", flush=True)
 
 
 def main(argv=None) -> int:
@@ -448,9 +487,11 @@ def main(argv=None) -> int:
               and pd["fused_vs_split_bit_identical"]
               and pd["speedup"] > 1.15
               and pd["fused_speedup_vs_prepared"] >= 1.5
+              and pd["metrics_overhead_frac"] <= 0.05
               and sharded_ok)
         print(f"# prepared {pd['speedup']:.2f}x, fused "
-              f"{pd['fused_speedup_vs_prepared']:.2f}x over prepared "
+              f"{pd['fused_speedup_vs_prepared']:.2f}x over prepared, "
+              f"telemetry overhead {pd['metrics_overhead_frac']:+.1%} "
               f"-> {'OK' if ok else 'FAIL'}")
         return 0 if ok else 1
 
@@ -492,6 +533,7 @@ def main(argv=None) -> int:
           and pd["speedup"] > 1.15
           and pd["fused_vs_split_bit_identical"]
           and pd["fused_speedup_vs_prepared"] >= 1.5
+          and pd["metrics_overhead_frac"] <= 0.05
           and sharded_ok)
     print(f"# parity worst rel-L2 {worst:.4f}; Program parity within "
           f"per-arch tolerance: {parity_ok}; prepared serving-LM decode "

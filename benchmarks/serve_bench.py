@@ -62,10 +62,10 @@ def run_wave(prog, reqs, wave_size: int):
     return comps, b.stats, time.time() - t0
 
 
-def run_continuous(prog, reqs, capacity: int):
+def run_continuous(prog, reqs, capacity: int, telemetry=None):
     from repro.serve.scheduler import ContinuousScheduler
     s = ContinuousScheduler(prog, capacity=capacity, max_len=48,
-                            prefill_bucket=4)
+                            prefill_bucket=4, telemetry=telemetry)
     for r in reqs:
         s.submit(r)
     t0 = time.time()
@@ -85,18 +85,27 @@ def main():
     from repro.api import Program
     from repro.models import transformer as tfm
 
+    from repro.obs.serving import ServingObs
+
     cfg = bench_cfg()
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
     # ONE compile-once Program serves both schedulers (same bank, shared
     # jit-cell cache) — the comparison isolates pure scheduling overhead
     prog = Program.build(cfg, params)
     reqs = make_trace(cfg.vocab_size, n)
+    # telemetry on the continuous run: latency percentiles + the
+    # PhotonicMeter's reuse-on vs reuse-off energy ledger (same schema as
+    # live serving — validated below)
+    obs = ServingObs.create(cfg, trace=False)
 
     print("name,us_per_call,derived")
     details = {}
     results = {}
     for tag, runner in (("wave", run_wave), ("continuous", run_continuous)):
-        comps, st, dt = runner(prog, reqs, args.slots)
+        if tag == "continuous":
+            comps, st, dt = runner(prog, reqs, args.slots, telemetry=obs)
+        else:
+            comps, st, dt = runner(prog, reqs, args.slots)
         assert sorted(c.rid for c in comps) == list(range(n))
         tput = st.generated_tokens / dt
         results[tag] = st
@@ -127,6 +136,33 @@ def main():
     print(f"serve_overhead_saving,0.0,continuous wins: wave {w.overhead:.1%}"
           f" -> continuous {c.overhead:.1%} (-{saving:.1%} wasted slot-steps"
           f" on the same trace)")
+
+    # ---- telemetry: latency percentiles + reuse-on vs reuse-off energy ----
+    pct = obs.tracker.percentiles()
+    details["continuous"]["latency_ms"] = {
+        k: {q: round(v[q], 3) for q in ("p50", "p95", "p99")}
+        for k, v in pct.items()}
+    rep = obs.meter.report()
+    details["energy"] = rep
+    print(f"serve_ttft_p50,{pct['ttft_ms']['p50'] * 1e3:.1f},"
+          f"p95 {pct['ttft_ms']['p95']:.1f}ms tpot p50 "
+          f"{pct['tpot_ms']['p50']:.2f}ms (continuous)", flush=True)
+    print(f"serve_energy_reuse,0.0,reuse ratio {rep['reuse_ratio']:.3f} "
+          f"({rep['amortization_passes_per_write']:.0f} passes/write); "
+          f"vs reprogram-per-pass: E -{rep['energy_savings_frac']:.1%} "
+          f"T -{rep['latency_savings_frac']:.1%} "
+          f"({rep['write_energy_saved_uJ']:.1f} uJ write energy avoided "
+          f"on the same trace)", flush=True)
+    # the snapshot every exporter shares — validated in-process against the
+    # checked-in schema so serve_bench cannot silently drift from it
+    snap = obs.snapshot()
+    from repro.obs.check_schema import validate
+    schema_path = os.path.join(os.path.dirname(__file__),
+                               "metrics_schema.json")
+    with open(schema_path) as f:
+        errs = validate(snap, json.load(f))
+    assert not errs, f"metrics snapshot violates metrics_schema.json: {errs}"
+    details["continuous"]["metrics"] = snap
     os.makedirs("results", exist_ok=True)
     with open("results/serve_bench.json", "w") as f:
         json.dump(details, f, indent=1)

@@ -34,7 +34,6 @@ methods on both backends (tested in ``tests/test_program_api.py``).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import warnings
@@ -48,6 +47,7 @@ from repro.configs.base import ModelConfig
 from repro.core import backend as backend_lib
 from repro.core import prepared as prepared_lib
 from repro.models import transformer as tfm
+from repro.obs import metrics as metrics_lib
 from repro.sharding import partition
 from repro.train.trainer import cross_entropy
 
@@ -55,7 +55,12 @@ NEG_INF = -1e30
 
 # python-side trace counter: incremented only when a jitted cell actually
 # retraces (the function body runs under trace).  Tests assert stability.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# The CounterGroup keeps the Counter/dict surface (``TRACE_COUNTS[k] += 1``,
+# ``dict(TRACE_COUNTS)``) while mirroring every write into the default
+# metrics registry as ``compile.trace.<cell>`` — retrace counts ride along
+# in every metrics snapshot.
+TRACE_COUNTS: metrics_lib.CounterGroup = metrics_lib.CounterGroup(
+    "compile.trace")
 
 
 @functools.lru_cache(maxsize=1)
@@ -281,14 +286,23 @@ class Program:
             bk = dataclasses.replace(bk, mesh=mesh)
         mesh = getattr(bk, "mesh", None)
         bank = _prepare_cell(params, cfg=cfg, photonic=bk.is_photonic)
+        dropped = 0
         if mesh is not None:
             report = partition.PartitionReport(dropped=[])
             sh = partition.bank_shardings(bank, tfm.model_specs(cfg), mesh,
                                           cfg.fsdp, report)
             bank = jax.device_put(bank, sh)
+            dropped = len(report.dropped)
             if report.dropped:
                 warnings.warn(partition.dropped_summary(report),
                               stacklevel=2)
+        # bank/partition accounting as registry gauges (last Program built
+        # wins — builds are one-time events, not hot-path)
+        reg = metrics_lib.default_registry()
+        reg.counter("program.builds").inc()
+        for k, v in prepared_lib.prepared_stats(bank).items():
+            reg.gauge(f"program.bank.{k}").set(v)
+        reg.gauge("program.partition.dropped_rules").set(dropped)
         return cls(cfg=cfg, backend=bk, bank=bank)
 
     @property
@@ -320,6 +334,8 @@ class Program:
         B = batch["tokens"].shape[0]
         if last is None:
             last = jnp.full((B,), batch["tokens"].shape[1] - 1, jnp.int32)
+        if metrics_lib.enabled():         # hot-path extra: gated
+            metrics_lib.counter("program.steps", kind="prefill").inc()
         return _prefill_cell(self.bank, batch, jnp.asarray(last, jnp.int32),
                              cfg=self.cfg, backend=self.backend,
                              cache_len=cache_len)
@@ -328,6 +344,8 @@ class Program:
         """One token per sequence.  tokens: (B, 1); ``pos`` scalar (aligned)
         or (B,) per-slot.  Cache buffers are donated (updated in place) on
         accelerators — pass the returned caches to the next step."""
+        if metrics_lib.enabled():
+            metrics_lib.counter("program.steps", kind="decode").inc()
         cell, _ = _decode_cells(_donate_caches())
         return cell(self.bank, tokens, caches, pos, cfg=self.cfg,
                     backend=self.backend)
@@ -339,6 +357,8 @@ class Program:
             raise ValueError("decode_sample(temperature>0) needs a PRNG key")
         if key is None:
             key = jax.random.PRNGKey(0)          # unused under greedy
+        if metrics_lib.enabled():
+            metrics_lib.counter("program.steps", kind="decode_sample").inc()
         _, cell = _decode_cells(_donate_caches())
         return cell(
             self.bank, tokens, caches, pos, key,

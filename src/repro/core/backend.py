@@ -70,6 +70,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import obu
 from repro.core.photonic import a8_scale
+from repro.obs import metrics as _metrics
 from repro.sharding import partition as _partition
 from repro.core.prepared import (PreparedTensor, quantize_weight,
                                  quantize_weight_t)
@@ -248,15 +249,21 @@ class Backend:
         K = x.shape[-1]
         N = wq.shape[-2] if transpose else wq.shape[-1]
         bm, bk, bn = self.tile_plan(M, K, N)
-        if self.fused:
-            return ops.photonic_matmul_fused(
-                x, wq, wscale, transpose=transpose, bias=bias,
-                block_perm=block_perm, block=block,
-                activation=activation or "none", bm=bm, bk=bk, bn=bn)
-        mm = (ops.photonic_matmul_prepared_t if transpose
-              else ops.photonic_matmul_prepared)
-        y = mm(x, wq, wscale, bm=bm, bk=bk, bn=bn)
-        return _epilogue_unfused(y, bias, block_perm, block, activation)
+        # trace-time kernel-call ledger: dispatch runs under jit trace, so
+        # this counts the Pallas calls compiled into each cell, once per
+        # (re)trace, keyed by the resolved tile plan
+        kind = "fused" if self.fused else "split"
+        _metrics.record_kernel_call(kind, bm, bk, bn)
+        with jax.named_scope(f"photonic.{kind}.{bm}x{bk}x{bn}"):
+            if self.fused:
+                return ops.photonic_matmul_fused(
+                    x, wq, wscale, transpose=transpose, bias=bias,
+                    block_perm=block_perm, block=block,
+                    activation=activation or "none", bm=bm, bk=bk, bn=bn)
+            mm = (ops.photonic_matmul_prepared_t if transpose
+                  else ops.photonic_matmul_prepared)
+            y = mm(x, wq, wscale, bm=bm, bk=bk, bn=bn)
+            return _epilogue_unfused(y, bias, block_perm, block, activation)
 
     def _photonic_matmul_sharded(self, x, wq, wscale, *, transpose, bias,
                                  block_perm, block, activation):
@@ -308,6 +315,16 @@ class Backend:
             in_specs.append(P("model" if col_tp else None))
             operands.append(bias)
         fused, plan = self.fused, self.tile_plan
+        # record the per-shard plan in the OUTER trace (the shard_map body
+        # may be re-traced internally; the local shapes are deterministic)
+        M = 1
+        for d in x.shape[:-1]:
+            M *= d
+        _metrics.record_kernel_call(
+            "sharded_fused" if fused else "sharded_split",
+            *plan(M // dp if row_shard else M,
+                  K // tp if red_tp else K,
+                  N // tp if col_tp else N))
 
         def body(xl, wl, xsl, wsl, *rest):
             bl = rest[0] if has_bias else None
@@ -340,8 +357,9 @@ class Backend:
             y = mm(xl, wl, wsl, bm=bm, bk=bk, bn=bn, x_scale=xsl)
             return _epilogue_unfused(y, bl, block_perm, block, activation)
 
-        return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
-                         out_specs=out_spec, check_rep=False)(*operands)
+        with jax.named_scope("photonic.sharded"):
+            return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                             out_specs=out_spec, check_rep=False)(*operands)
 
     def reuse_dot(self, x_stack, w):
         """T independent activation streams through ONE weight: x_stack
@@ -355,10 +373,12 @@ class Backend:
         if self.mesh_active:
             wq, wscale = quantize_weight(w)
             return self._reuse_dot_sharded(x_stack, wq, wscale)
-        bm, _, bn = self.tile_plan(
+        bm, bk, bn = self.tile_plan(
             int(np.prod(x_stack.shape[1:-1])), x_stack.shape[-1],
             w.shape[-1])
-        return ops.reuse_resident_matmul(x_stack, w, bm=bm, bn=bn)
+        _metrics.record_kernel_call("reuse", bm, bk, bn)
+        with jax.named_scope(f"photonic.reuse.{bm}x{bn}"):
+            return ops.reuse_resident_matmul(x_stack, w, bm=bm, bn=bn)
 
     def reuse_dot_prepared(self, x_stack, prep: PreparedTensor):
         """Reuse-resident matmul against a programmed bank (the fully
@@ -370,11 +390,13 @@ class Backend:
             return obu.blend_dot(x_stack, w, transpose=False)
         if self.mesh_active:
             return self._reuse_dot_sharded(x_stack, prep.wq, prep.scale)
-        bm, _, bn = self.tile_plan(
+        bm, bk, bn = self.tile_plan(
             int(np.prod(x_stack.shape[1:-1])), x_stack.shape[-1],
             prep.shape[-1])
-        return ops.reuse_resident_matmul_prepared(
-            x_stack, prep.wq, prep.scale, bm=bm, bn=bn)
+        _metrics.record_kernel_call("reuse", bm, bk, bn)
+        with jax.named_scope(f"photonic.reuse.{bm}x{bn}"):
+            return ops.reuse_resident_matmul_prepared(
+                x_stack, prep.wq, prep.scale, bm=bm, bn=bn)
 
     def _reuse_dot_sharded(self, x_stack, wq, wscale):
         """Reuse-resident kernel under shard_map: the programmed bank splits
@@ -397,10 +419,16 @@ class Backend:
             return ops.reuse_resident_matmul_prepared(xl, wl, wsl,
                                                       bm=bm, bn=bn)
 
-        return shard_map(
-            body, mesh=mesh,
-            in_specs=(P(*mid, None), P(None, nspec), P(nspec)),
-            out_specs=P(*mid, nspec), check_rep=False)(x_stack, wq, wscale)
+        _metrics.record_kernel_call(
+            "sharded_reuse", *plan(int(np.prod(x_stack.shape[1:-1])),
+                                   x_stack.shape[-1],
+                                   N // tp if col_tp else N))
+        with jax.named_scope("photonic.sharded_reuse"):
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(*mid, None), P(None, nspec), P(nspec)),
+                out_specs=P(*mid, nspec),
+                check_rep=False)(x_stack, wq, wscale)
 
     # -------------------------------------------------------------- shuffle
     def shuffle(self, h, perm, block_perm=None, block: int = 0):
@@ -425,8 +453,9 @@ class Backend:
                         hl, bl, block_perm, block=block, activation="none"),
                     mesh=mesh, in_specs=(hs, P(None)), out_specs=hs,
                     check_rep=False)(h, bias)
-            return ops.blend_shuffle(h, bias, block_perm, block=block,
-                                     activation="none")
+            with jax.named_scope("photonic.blend_shuffle"):
+                return ops.blend_shuffle(h, bias, block_perm, block=block,
+                                         activation="none")
         return obu.apply_channel_permutation(h, perm)
 
 

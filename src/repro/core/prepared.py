@@ -233,17 +233,33 @@ def prepare_params(params: Any, compute_dtype, photonic: bool) -> Any:
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+MRR_TILE = 128   # physical crossbar tile edge (paper §2: 128x128 MRR array)
+
+
 def prepared_stats(bank: Any) -> dict:
-    """Bank accounting: programmed tensors / int8 bytes / fp leaves."""
+    """Bank accounting: programmed tensors / int8 bytes / fp leaves, plus
+    the physical-programming view — how many 128x128 MRR tiles the banks
+    occupy and how many W0 checksum words the read-back verification
+    carries.  ``Program.build`` mirrors every entry into the metrics
+    registry as ``program.bank.*`` gauges."""
     n_prog = 0
     int8_bytes = 0
     fp_bytes = 0
+    mrr_tiles = 0
+    checksums = 0
     for leaf in jax.tree.leaves(
             bank, is_leaf=lambda x: isinstance(x, PreparedTensor)):
         if isinstance(leaf, PreparedTensor):
             n_prog += 1
             int8_bytes += leaf.wq.size + leaf.wq_t.size
+            checksums += leaf.w0_colsum.size
+            k, n = leaf.wq.shape[-2], leaf.wq.shape[-1]
+            stacked = 1
+            for d in leaf.wq.shape[:-2]:
+                stacked *= int(d)
+            mrr_tiles += stacked * -(-k // MRR_TILE) * -(-n // MRR_TILE)
         elif hasattr(leaf, "nbytes"):
             fp_bytes += leaf.nbytes
     return {"programmed_tensors": n_prog, "int8_bytes": int8_bytes,
-            "fp_bytes": fp_bytes}
+            "fp_bytes": fp_bytes, "mrr_tiles_128": mrr_tiles,
+            "checksum_count": checksums}

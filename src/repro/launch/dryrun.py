@@ -37,6 +37,7 @@ from repro.core.costmodel import V5E, roofline_terms
 from repro.launch import analysis
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as tfm
+from repro.obs import metrics as metrics_lib
 from repro.optim import adamw
 from repro.sharding import partition
 from repro.train import trainer
@@ -136,6 +137,18 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
                 if cfg.family == "audio" and shape.kind != "decode" else 0)
     mult = 6.0 if shape.kind == "train" else 2.0
     return mult * (act["decoder"] * toks_dec + act["encoder"] * toks_enc)
+
+
+def _metrics_block() -> dict:
+    """Compile-side observability for the cell report: which Pallas
+    megakernel variants were compiled in (per tile plan, recorded at trace
+    time by the backend dispatch) + the jit retrace ledger."""
+    snap = metrics_lib.default_registry().snapshot()
+    return {
+        "kernel_calls": {k: v for k, v in snap["counters"].items()
+                         if k.startswith("kernel.")},
+        "trace_counts": dict(api.TRACE_COUNTS),
+    }
 
 
 # =========================================================================
@@ -248,6 +261,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
                                    ispec["caches"], ispec["pos"])
         result["lower_s"] = round(time.time() - t0, 2)
         if not compile_:
+            result["metrics"] = _metrics_block()
             result["status"] = "lowered"
             return result
         t1 = time.time()
@@ -323,6 +337,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
     result["model_flops"] = acost.matmul_flops
     result["useful_flops_ratio"] = (acost.matmul_flops / acost.total_flops
                                     if acost.total_flops > 0 else 0.0)
+    result["metrics"] = _metrics_block()
     result["status"] = "ok"
     return result
 

@@ -22,6 +22,7 @@ per-shard (DESIGN.md §Sharded execution).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import warnings
 
@@ -34,6 +35,8 @@ from repro.api import Program
 from repro.configs import get_arch, smoke_variant
 from repro.launch import mesh as mesh_lib
 from repro.models import transformer as tfm
+from repro.obs import metrics as metrics_lib
+from repro.obs.serving import ServingObs
 from repro.sharding import partition
 from repro.serve.batcher import Request, WaveBatcher
 from repro.serve.scheduler import ContinuousScheduler
@@ -86,6 +89,17 @@ def main(argv=None):
                     help="execution mesh: 'auto' (largest (data, model) "
                          "mesh from available devices), 'DxM' (e.g. 2x2), "
                          "or omit for single-device")
+    ap.add_argument("--stats", action="store_true",
+                    help="enable telemetry: periodic stats line (TTFT/TPOT "
+                         "p50/p95, slot occupancy, reuse ratio, write "
+                         "energy saved) + final energy report")
+    ap.add_argument("--stats-every", type=int, default=8,
+                    help="scheduler steps between stats lines")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON (chrome://tracing) here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics JSON snapshot "
+                         "(benchmarks/metrics_schema.json shape) here")
     args = ap.parse_args(argv)
     cfg = smoke_variant(args.arch) if args.smoke else get_arch(
         args.arch, reuse=args.reuse)
@@ -111,7 +125,16 @@ def main(argv=None):
         st = prog.bank_stats()
         print(f"[serve] photonic banks prepared once: "
               f"{st['programmed_tensors']} tensors, "
-              f"{st['int8_bytes'] / 1e6:.2f} MB int8")
+              f"{st['int8_bytes'] / 1e6:.2f} MB int8, "
+              f"{st['mrr_tiles_128']} MRR tiles")
+
+    # telemetry bundle: one registry + tracer + request tracker + photonic
+    # meter, threaded through the scheduler (repro.obs)
+    obs = None
+    if args.stats or args.trace_out or args.metrics_out:
+        obs = ServingObs.create(cfg, trace=bool(args.trace_out)
+                                or args.stats)
+        metrics_lib.enable()
 
     if args.scheduler == "engine":
         prompt = jax.random.randint(jax.random.PRNGKey(1),
@@ -134,7 +157,7 @@ def main(argv=None):
     reqs = _make_trace(cfg, args.requests, args.max_prompt, args.new_tokens)
     if args.scheduler == "wave":
         sched = WaveBatcher(prog, wave_size=args.capacity,
-                            temperature=args.temperature)
+                            temperature=args.temperature, telemetry=obs)
     else:
         capacity = args.capacity
         if mesh is not None:
@@ -147,11 +170,22 @@ def main(argv=None):
         sched = ContinuousScheduler(
             prog, capacity=capacity,
             max_len=args.max_prompt + args.new_tokens,
-            temperature=args.temperature)
+            temperature=args.temperature, telemetry=obs)
     for r in reqs:
         sched.submit(r)
     t0 = time.time()
-    comps = sched.drain()
+    if args.scheduler == "continuous" and obs is not None and args.stats:
+        # step-driven drain so the periodic stats line interleaves with
+        # serving (the long-running-server view of the same loop)
+        comps = []
+        step_i = 0
+        while sched.queue or sched.pool.num_active:
+            comps.extend(sched.step())
+            step_i += 1
+            if step_i % max(1, args.stats_every) == 0:
+                print(obs.stats_line(sched.stats, step=step_i))
+    else:
+        comps = sched.drain()
     dt = time.time() - t0
     st = sched.stats
     gen = st.generated_tokens
@@ -159,6 +193,29 @@ def main(argv=None):
           f"{gen} new tokens in {dt:.2f}s ({gen / dt:.1f} tok/s on CPU)")
     print(f"  slot-steps executed {st.slot_steps}, useful {st.useful_steps}, "
           f"overhead {st.overhead:.1%}")
+    if obs is not None:
+        if args.stats:
+            print(obs.stats_line(getattr(sched, "stats", None)))
+            if obs.meter is not None:
+                rep = obs.meter.report()
+                print(f"  energy: {rep['bank_writes']} bank writes, "
+                      f"{rep['matrix_passes']} matrix passes, "
+                      f"reuse {rep['reuse_ratio']:.3f}, amortization "
+                      f"{rep['amortization_passes_per_write']:.1f} "
+                      f"passes/write, saved "
+                      f"{rep['write_energy_saved_uJ']:.1f} uJ write energy "
+                      f"(-{rep['energy_savings_frac']:.1%} E, "
+                      f"-{rep['latency_savings_frac']:.1%} T vs "
+                      f"reprogram-per-pass)")
+        if args.trace_out:
+            obs.tracer.save(args.trace_out)
+            print(f"[serve] Chrome trace -> {args.trace_out} "
+                  f"({len(obs.tracer.events)} events)")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(obs.snapshot(), f, indent=1)
+            print(f"[serve] metrics snapshot -> {args.metrics_out}")
+        metrics_lib.disable()
     comps.sort(key=lambda c: c.rid)
     if comps:
         print("  first completion:", comps[0].tokens.tolist()[:48])

@@ -1,0 +1,197 @@
+"""PhotonicMeter — the paper's energy/latency economics, measured at runtime.
+
+``core/costmodel.py`` prices writes and passes statically; this meter turns
+those prices into a *live* ledger by watching the serving loop: every
+simulated MRR bank write (programming a basic block's matrices) and every
+reuse hit (a matrix pass served by an already-resident bank) is accounted
+against the calibrated Table-3 model, and the report comes out in the
+paper's own units —
+
+  * ``reuse_ratio``          — matrix passes served WITHOUT a fresh
+    programming / all matrix passes (R&B's write amortization, live);
+  * ``energy_savings_frac``  — 1 - E_rb / E_baseline where the baseline
+    reprograms every logical matrix per pass (paper headline: 69%);
+  * ``latency_savings_frac`` — same ratio on the delay ledger (57%);
+  * ``write_energy_saved_uJ`` — the cumulative write energy the resident
+    banks avoided, the number ``launch/serve.py --stats`` prints per line.
+
+The accounting model mirrors ``ReuseAwareAdmission``: the R physical basic
+blocks (each ``mats_per_block`` matrices of ~(d, d)) are programmed once at
+serving start and re-programmed every ``refresh_steps`` decode steps
+(thermal-drift recalibration, paper §4.2.3), while every executed row of
+every step streams through the stack's ``depth x mats`` logical matrices.
+The no-reuse baseline programs each logical matrix per pass (programs ==
+passes — exactly ``costmodel.baseline_stack_cost``'s schedule), so the
+savings fractions are a true reuse-on vs reuse-off comparison over the SAME
+served trace (tests/test_obs.py checks the ledger against a hand-computed
+``costmodel`` trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import costmodel
+from repro.core.prm import ReusePlan
+from repro.obs import metrics as _metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class StackProfile:
+    """Static per-arch quantities the meter prices against: R physical
+    blocks, logical depth, matrices per block, and the representative
+    (rows, cols) crossbar shape."""
+
+    num_physical: int            # R — basic blocks actually programmed
+    depth: int                   # logical layers (passes per token)
+    mats_per_block: int          # weight matrices per basic block
+    rows: int
+    cols: int
+    tile: int
+
+    @classmethod
+    def from_cfg(cls, cfg, *, tile: int = 256,
+                 mats_per_block: int = 6) -> "StackProfile":
+        """Same derivation as ``ReuseAwareAdmission.build`` — decoder
+        segments only, PRM plan per segment."""
+        from repro.models import transformer as tfm
+        R, depth = 0, 0
+        for spec in tfm.build_segments(cfg):
+            if spec.stream == "encoder":
+                continue
+            plan = ReusePlan.build(spec.num_groups, spec.reuse)
+            R += plan.num_physical
+            depth += spec.depth
+        d = cfg.d_model
+        return cls(num_physical=max(1, R), depth=max(1, depth),
+                   mats_per_block=mats_per_block, rows=d, cols=d, tile=tile)
+
+
+class PhotonicMeter:
+    """Write-vs-reuse energy/latency ledger over the calibrated cost model.
+
+    Hook points (called by the continuous scheduler / benches):
+
+      * :meth:`on_prefill`       — ``tokens`` rows ran through the stack;
+      * :meth:`on_decode_step`   — one decode step executed ``rows`` lanes
+        (the full slot capacity — idle lanes burn optical passes too);
+        bank (re)programming is accounted here, once at first use and then
+        every ``refresh_steps`` decode steps;
+      * :meth:`record_bank_write` / :meth:`record_passes` — the raw ledger,
+        for callers with their own schedule.
+
+    All accumulators also mirror into ``registry`` gauges/counters under
+    ``energy.*`` so the meter's report and the metrics snapshot agree.
+    """
+
+    def __init__(self, profile: StackProfile, *, refresh_steps: int = 8,
+                 registry: _metrics.MetricsRegistry | None = None,
+                 model: costmodel.CalibratedCost = costmodel.CALIBRATED):
+        self.profile = profile
+        self.refresh_steps = max(1, refresh_steps)
+        self.registry = registry or _metrics.MetricsRegistry()
+        self.model = model
+        p = profile
+        # per-matrix unit prices (ns, uJ) — priced once, applied per event.
+        # The affine fit's negative write intercept is a pipeline-fill term
+        # that cancels in any full pass (costmodel docstring); as a
+        # standalone per-event price it must be non-negative, so clamp —
+        # only active for sub-calibration toy sizes (u < 8 bank cycles).
+        self._wd, self._we = model.write_cost(p.rows, p.cols, p.tile)
+        self._cd, self._ce = model.compute_cost(p.rows, p.cols, p.tile)
+        self._wd = max(self._wd, 0.0)
+        self._cd = max(self._cd, 0.0)
+        self.bank_writes = 0          # matrices programmed (R&B schedule)
+        self.matrix_passes = 0        # logical matrix MVM passes executed
+        self.baseline_writes = 0      # programs the no-reuse baseline pays
+        self.decode_steps = 0
+        self._steps_since_refresh = 0
+        self._programmed = False
+
+    # ------------------------------------------------------------ raw ledger
+    def record_bank_write(self, n: int = 1) -> None:
+        self.bank_writes += n
+        self.registry.counter("energy.bank_writes").inc(n)
+
+    def record_passes(self, n: int = 1) -> None:
+        self.matrix_passes += n
+        self.baseline_writes += n       # baseline reprograms per pass
+        self.registry.counter("energy.matrix_passes").inc(n)
+
+    # --------------------------------------------------------- serving hooks
+    def _program_banks(self) -> None:
+        self.record_bank_write(self.profile.num_physical
+                               * self.profile.mats_per_block)
+
+    def _stack_passes(self, rows: int) -> None:
+        """``rows`` activation rows ran the whole stack once."""
+        if rows <= 0:
+            return
+        if not self._programmed:       # first traffic programs the banks
+            self._programmed = True
+            self._program_banks()
+        self.record_passes(rows * self.profile.depth
+                           * self.profile.mats_per_block)
+
+    def on_prefill(self, tokens: int) -> None:
+        self._stack_passes(tokens)
+
+    def on_decode_step(self, rows: int) -> None:
+        self.decode_steps += 1
+        self._steps_since_refresh += 1
+        if self._steps_since_refresh >= self.refresh_steps:
+            # thermal-drift recalibration: reprogram the R basic blocks
+            self._steps_since_refresh = 0
+            self._program_banks()
+        self._stack_passes(rows)
+
+    # --------------------------------------------------------------- report
+    @property
+    def reuse_hits(self) -> int:
+        """Matrix passes served without a fresh programming."""
+        return max(0, self.matrix_passes - self.bank_writes)
+
+    @property
+    def reuse_ratio(self) -> float:
+        return (self.reuse_hits / self.matrix_passes
+                if self.matrix_passes else 0.0)
+
+    def report(self) -> dict:
+        """The ``energy`` block of the metrics schema, in paper units."""
+        we = self.bank_writes * self._we
+        wd = self.bank_writes * self._wd
+        ce = self.matrix_passes * self._ce
+        cd = self.matrix_passes * self._cd
+        bwe = self.baseline_writes * self._we
+        bwd = self.baseline_writes * self._wd
+        e_rb, e_base = we + ce, bwe + ce
+        t_rb, t_base = wd + cd, bwd + cd
+        rep = {
+            "tile": self.profile.tile,
+            "num_physical_blocks": self.profile.num_physical,
+            "logical_depth": self.profile.depth,
+            "refresh_steps": self.refresh_steps,
+            "decode_steps": self.decode_steps,
+            "bank_writes": self.bank_writes,
+            "matrix_passes": self.matrix_passes,
+            "reuse_hits": self.reuse_hits,
+            "reuse_ratio": self.reuse_ratio,
+            # amortization per PRM stack: passes served per programming
+            "amortization_passes_per_write": (
+                self.matrix_passes / self.bank_writes
+                if self.bank_writes else 0.0),
+            "write_energy_uJ": we,
+            "compute_energy_uJ": ce,
+            "write_delay_ns": wd,
+            "compute_delay_ns": cd,
+            "baseline_write_energy_uJ": bwe,
+            "write_energy_saved_uJ": max(bwe - we, 0.0),
+            "write_delay_saved_ns": max(bwd - wd, 0.0),
+            "energy_savings_frac": (1.0 - e_rb / e_base) if e_base else 0.0,
+            "latency_savings_frac": (1.0 - t_rb / t_base) if t_base else 0.0,
+        }
+        g = self.registry.gauge
+        g("energy.reuse_ratio").set(rep["reuse_ratio"])
+        g("energy.write_energy_saved_uJ").set(rep["write_energy_saved_uJ"])
+        g("energy.energy_savings_frac").set(rep["energy_savings_frac"])
+        g("energy.latency_savings_frac").set(rep["latency_savings_frac"])
+        return rep

@@ -14,6 +14,7 @@ which decodes with per-slot positions over a ``serve.slots.SlotPool``
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
@@ -23,6 +24,13 @@ import jax.numpy as jnp
 
 from repro import api
 from repro.configs.base import ModelConfig
+# WaveStats lives in the shared stats protocol (repro.obs.stats) now —
+# re-exported here so historical imports keep working
+from repro.obs.stats import WaveStats as WaveStats  # noqa: F401
+
+
+def _null():
+    return contextlib.nullcontext()
 
 
 @dataclasses.dataclass
@@ -43,35 +51,20 @@ class Completion:
     finish_reason: str = "length"  # length | eos
 
 
-@dataclasses.dataclass
-class WaveStats:
-    waves: int = 0
-    requests: int = 0
-    prompt_tokens: int = 0
-    padded_tokens: int = 0
-    generated_tokens: int = 0
-    slot_steps: int = 0           # executed slot-token-steps (incl. padding
-                                  # and decode lanes past a request's max_new)
-    useful_steps: int = 0         # prompt tokens + kept generated tokens
-
-    @property
-    def padding_overhead(self) -> float:
-        total = self.prompt_tokens + self.padded_tokens
-        return self.padded_tokens / total if total else 0.0
-
-    @property
-    def overhead(self) -> float:
-        """Wasted fraction of executed slot-token-steps — the metric shared
-        with ContinuousStats so the two schedulers compare directly."""
-        return (1.0 - self.useful_steps / self.slot_steps
-                if self.slot_steps else 0.0)
-
-
 class WaveBatcher:
-    """Admit requests, emit completions wave by wave."""
+    """Admit requests, emit completions wave by wave.
+
+    ``telemetry`` (an optional :class:`repro.obs.serving.ServingObs`)
+    shares the registry with ``self.stats`` and adds request-lifecycle
+    latency histograms + wave spans in the Chrome trace.  Waves run as one
+    blocking ``generate``, so per-request TTFT inside a wave is not
+    observable — the tracker records admission at wave start and completion
+    at wave end (the continuous scheduler is the per-token path).
+    """
 
     def __init__(self, params, cfg: ModelConfig = None, wave_size: int = 8,
-                 pad_id: int = 0, temperature: float = 0.0):
+                 pad_id: int = 0, temperature: float = 0.0,
+                 telemetry=None):
         # accepts a prebuilt ``api.Program`` (compile-once entry) or the
         # legacy (params, cfg) pair
         if isinstance(params, api.Program):
@@ -87,10 +80,14 @@ class WaveBatcher:
         self.pad_id = pad_id
         self.temperature = temperature
         self.queue: list[Request] = []
-        self.stats = WaveStats()
+        self.obs = telemetry
+        self.stats = WaveStats(
+            registry=telemetry.registry if telemetry else None)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        if self.obs:
+            self.obs.tracker.on_submit(req.rid)
 
     @staticmethod
     def _extras_match(a: Optional[dict], b: Optional[dict]) -> bool:
@@ -129,9 +126,20 @@ class WaveBatcher:
             # aligned decode then starts all slots together)
             prompts[i, max_prompt - len(r.prompt):] = r.prompt
         extras = wave[0].extras      # every wave member matches (_form_wave)
-        out = self.program.generate(jnp.asarray(prompts), max_new,
-                                    extras=extras,
-                                    temperature=self.temperature)
+        if self.obs:
+            for r in wave:
+                self.obs.tracker.on_admit(r.rid, len(r.prompt), max_prompt)
+            if self.obs.meter is not None:
+                self.obs.meter.on_prefill(B * max_prompt)
+        tr = self.obs.tracer if self.obs else None
+        with (tr.span("wave", requests=B, max_prompt=max_prompt,
+                      max_new=max_new) if tr else _null()):
+            out = self.program.generate(jnp.asarray(prompts), max_new,
+                                        extras=extras,
+                                        temperature=self.temperature)
+        if self.obs and self.obs.meter is not None:
+            for _ in range(max_new - 1):
+                self.obs.meter.on_decode_step(B)
         out = np.asarray(out)
         comps = []
         for i, r in enumerate(wave):
@@ -140,6 +148,8 @@ class WaveBatcher:
             comps.append(Completion(rid=r.rid, tokens=toks,
                                     prompt_len=len(r.prompt),
                                     padded_to=max_prompt))
+            if self.obs:
+                self.obs.tracker.on_finish(r.rid)
             self.stats.prompt_tokens += len(r.prompt)
             self.stats.padded_tokens += max_prompt - len(r.prompt)
             self.stats.generated_tokens += r.max_new

@@ -22,6 +22,7 @@ Both schedulers implement the ``Scheduler`` protocol: ``submit`` requests,
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import math
 from typing import Callable, Optional, Protocol, runtime_checkable
@@ -36,6 +37,9 @@ from repro.configs.base import ModelConfig
 from repro.core import costmodel
 from repro.core.prm import ReusePlan
 from repro.models import transformer as tfm
+# ContinuousStats lives in the shared stats protocol (repro.obs.stats) —
+# re-exported so historical imports keep working
+from repro.obs.stats import ContinuousStats as ContinuousStats  # noqa: F401
 from repro.serve.batcher import Completion, Request
 from repro.serve.slots import SlotPool, SlotState
 
@@ -107,37 +111,6 @@ class ReuseAwareAdmission:
 
 
 # =========================================================================
-# stats
-# =========================================================================
-@dataclasses.dataclass
-class ContinuousStats:
-    requests: int = 0
-    prefills: int = 0
-    decode_steps: int = 0
-    prompt_tokens: int = 0
-    padded_prefill_tokens: int = 0   # bucket padding beyond the prompt
-    generated_tokens: int = 0
-    slot_steps: int = 0              # executed slot-token-steps (incl. idle)
-    idle_slot_steps: int = 0         # decode lanes run with no active request
-    useful_steps: int = 0            # processed positions that served a
-                                     # request: prompt + post-prefill decodes
-
-    @property
-    def overhead(self) -> float:
-        """Wasted fraction of executed slot-token-steps (pad + idle lanes)."""
-        return (1.0 - self.useful_steps / self.slot_steps
-                if self.slot_steps else 0.0)
-
-    @property
-    def idle_fraction(self) -> float:
-        if not self.decode_steps:
-            return 0.0
-        return self.idle_slot_steps / (self.decode_steps * self._capacity)
-
-    _capacity: int = 1
-
-
-# =========================================================================
 # continuous scheduler
 # =========================================================================
 class ContinuousScheduler:
@@ -166,7 +139,8 @@ class ContinuousScheduler:
                  admission: Optional[ReuseAwareAdmission] = None,
                  mesh=None,
                  on_token: Optional[Callable[[int, int], None]] = None,
-                 on_complete: Optional[Callable[[Completion], None]] = None):
+                 on_complete: Optional[Callable[[Completion], None]] = None,
+                 telemetry=None):
         # compile-once entry: pass a prebuilt ``api.Program`` as the first
         # argument (backend + prepared banks resolved exactly once, shared
         # with other schedulers); or the legacy (params, cfg) pair, which
@@ -209,7 +183,14 @@ class ContinuousScheduler:
             "ssm" in spec.mixer_kinds for spec in tfm.build_segments(cfg)
             if spec.stream != "encoder")
         self.queue: collections.deque[Request] = collections.deque()
-        self.stats = ContinuousStats(_capacity=capacity)
+        # telemetry: an optional repro.obs.serving.ServingObs — request-
+        # lifecycle latency histograms (TTFT/TPOT/e2e), Chrome-trace spans,
+        # and the PhotonicMeter write-vs-reuse energy ledger.  The stats
+        # counters share its registry so one snapshot carries everything.
+        self.obs = telemetry
+        self.stats = ContinuousStats(
+            registry=telemetry.registry if telemetry else None,
+            _capacity=capacity)
         self.key = jax.random.PRNGKey(seed)
         # current (unprocessed) token per slot, fed to the next decode step
         self._cur = np.full((capacity, 1), pad_id, np.int32)
@@ -224,6 +205,8 @@ class ContinuousScheduler:
         if req.max_new < 1:
             raise ValueError("max_new must be >= 1")
         self.queue.append(req)
+        if self.obs:
+            self.obs.tracker.on_submit(req.rid)
 
     def drain(self) -> list[Completion]:
         """Run until queue and slots are empty; completions in finish order."""
@@ -246,6 +229,8 @@ class ContinuousScheduler:
                 done.append(comp)
         if self.pool.num_active:
             done.extend(self._decode_once())
+        if self.obs and self.obs.tracer.enabled:
+            self.obs.tracer.counter("active_slots", self.pool.num_active)
         return done
 
     # ------------------------------------------------------------ internals
@@ -267,6 +252,11 @@ class ContinuousScheduler:
                           prompt=np.asarray(req.prompt, np.int32),
                           padded_to=bucket)
         slot = self.pool.allocate(state)
+        if self.obs:
+            self.obs.tracker.on_admit(req.rid, plen, bucket)
+            if self.obs.meter is not None:
+                # the prefill streams `bucket` positions through the stack
+                self.obs.meter.on_prefill(bucket)
         toks = np.full((1, bucket), self.pad_id, np.int32)
         toks[0, :plen] = req.prompt
         batch = {"tokens": jnp.asarray(toks)}
@@ -295,6 +285,13 @@ class ContinuousScheduler:
         state.tokens.append(tok)
         state.generated += 1
         self.stats.generated_tokens += 1
+        if self.obs:
+            # the first token comes out of prefill (TTFT); later ones are
+            # decode inter-arrivals (TPOT)
+            if state.generated == 1:
+                self.obs.tracker.on_first_token(state.rid)
+            else:
+                self.obs.tracker.on_token(state.rid)
         if self.on_token is not None:
             self.on_token(state.rid, tok)
         hit_eos = state.eos_id is not None and tok == state.eos_id
@@ -307,6 +304,8 @@ class ContinuousScheduler:
                                        np.asarray(state.tokens, np.int32)]),
                 prompt_len=state.prompt_len, padded_to=state.padded_to,
                 finish_reason="eos" if hit_eos else "length")
+            if self.obs:
+                self.obs.tracker.on_finish(state.rid, comp.finish_reason)
             if self.on_complete is not None:
                 self.on_complete(comp)
             return comp
@@ -314,10 +313,20 @@ class ContinuousScheduler:
 
     def _decode_once(self) -> list[Completion]:
         active = self.pool.active_slots()
-        nxt, self.pool.caches = self.program.decode_sample(
-            jnp.asarray(self._cur), self.pool.caches,
-            self.pool.position_vector(), key=self._next_key(),
-            temperature=self.temperature)
+        self.stats.observe_active(len(active))
+        if self.obs and self.obs.meter is not None:
+            # the fused decode step runs the FULL pool through the stack —
+            # idle slots ride along padded (that waste is what the
+            # occupancy histogram + idle_fraction expose)
+            self.obs.meter.on_decode_step(self.pool.capacity)
+        tr = self.obs.tracer if self.obs else None
+        with (tr.span("decode_step", active=len(active),
+                      capacity=self.pool.capacity)
+              if tr and tr.enabled else contextlib.nullcontext()):
+            nxt, self.pool.caches = self.program.decode_sample(
+                jnp.asarray(self._cur), self.pool.caches,
+                self.pool.position_vector(), key=self._next_key(),
+                temperature=self.temperature)
         nxt = np.asarray(nxt)
         self.stats.decode_steps += 1
         self.stats.slot_steps += self.pool.capacity
