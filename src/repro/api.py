@@ -165,6 +165,26 @@ def _mesh_act_pspec(backend, B: int):
     return NamedSharding(mesh, partition.act_pspec(mesh, "replicated"))
 
 
+def _decode_act_pspec(backend, B: int):
+    """Layer-boundary residual anchor for the pipelined decode cells.
+
+    The sharded matmul path leaves TP outputs model-sharded (reduce-scatter
+    + lazy gather, `core/backend.py`); this constraint tells GSPMD the
+    residual must be whole again only AT the layer boundary, so the
+    all-gather lands next to the residual add — after the epilogue, where
+    it overlaps the next layer's kernels — instead of wherever propagation
+    happens to cut it.  Unlike the train-cell ``_mesh_act_pspec`` it also
+    applies on pure-TP meshes (dp == 1); None off-mesh and on a 1x1 mesh,
+    preserving the unsharded cells bit-for-bit."""
+    mesh = _backend_mesh(backend)
+    if mesh is None:
+        return None
+    dp = partition.dp_size(mesh)
+    if dp > 1 and B % dp != 0:
+        return None
+    return NamedSharding(mesh, partition.act_pspec(mesh, "replicated"))
+
+
 # =========================================================================
 # module-level jit cells (trace cache shared across all Programs)
 # =========================================================================
@@ -204,9 +224,10 @@ def _decode_cells(donate: bool):
     def decode_cell(bank, tokens, caches, pos, *, cfg: ModelConfig,
                     backend):
         TRACE_COUNTS["decode"] += 1
-        logits, caches, _ = tfm.forward(bank, cfg, {"tokens": tokens},
-                                        mode="decode", caches=caches,
-                                        pos=pos, execution=backend)
+        logits, caches, _ = tfm.forward(
+            bank, cfg, {"tokens": tokens}, mode="decode", caches=caches,
+            pos=pos, execution=backend,
+            act_pspec=_decode_act_pspec(backend, tokens.shape[0]))
         return logits[:, 0, :], caches
 
     @functools.partial(jax.jit,
@@ -217,9 +238,10 @@ def _decode_cells(donate: bool):
         """Fused decode + sample: one jitted computation per token (the
         sampler never round-trips logits through the host)."""
         TRACE_COUNTS["decode_sample"] += 1
-        logits, caches, _ = tfm.forward(bank, cfg, {"tokens": tokens},
-                                        mode="decode", caches=caches,
-                                        pos=pos, execution=backend)
+        logits, caches, _ = tfm.forward(
+            bank, cfg, {"tokens": tokens}, mode="decode", caches=caches,
+            pos=pos, execution=backend,
+            act_pspec=_decode_act_pspec(backend, tokens.shape[0]))
         logits = _mask_padded(logits[:, 0, :].astype(jnp.float32),
                               cfg.vocab_size)
         if greedy:

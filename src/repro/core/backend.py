@@ -69,7 +69,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import obu
-from repro.core.photonic import a8_scale
+from repro.core.photonic import a8_scale_from_amax
 from repro.obs import metrics as _metrics
 from repro.sharding import partition as _partition
 from repro.core.prepared import (PreparedTensor, quantize_weight,
@@ -78,6 +78,71 @@ from repro.kernels import ops
 from repro.kernels.photonic_mvm import tile_plan
 
 EXECUTIONS = ("xla", "photonic")
+
+# How a row-parallel (K-split) matmul rejoins its partial sums:
+#   * "reduce_scatter" — ``psum_scatter`` leaves each shard its own output
+#     slice; the epilogue runs per-slice and the full output re-joins
+#     LAZILY via the model-sharded out_spec (GSPMD places the all-gather at
+#     the consumer, where it overlaps the next kernel).  Bitwise identical
+#     to "psum": the same partial sums are added, only their placement
+#     changes (gated in ``launch/shardcheck.py --collectives``).
+#   * "psum"          — the legacy full all-reduce; epilogue post-psum.
+#     Still the only row-parallel option when the output slices do not
+#     divide or a blocked shuffle crosses them.  Kept as the bit-identity
+#     comparator for the reduce-scatter path.
+#   * "ring"          — explicit ``ppermute`` reduce-scatter: tp per-chunk
+#     kernels interleaved with ring sends, so each hop's transfer overlaps
+#     the next chunk's compute (the collective–compute pipeline spelled
+#     out; same per-shard result as "reduce_scatter").
+TP_COLLECTIVES = ("reduce_scatter", "psum", "ring")
+
+
+def partition_rule(tp: int, K: int, N: int, *, block_perm=None,
+                   tp_hint=None, collective: str = "reduce_scatter") -> str:
+    """Resolve the tensor-parallel partition rule for a (K, N)-shaped
+    matmul on a mesh with ``tp`` "model" shards.
+
+    Returns one of:
+
+      * ``"column"``     — output channels split; no reduction collective
+        (the sharded output re-joins lazily downstream);
+      * ``"scatter"``    — K split; partial kernels + ``psum_scatter``,
+        per-slice epilogue, lazy gather;
+      * ``"ring"``       — K split; explicit ppermute reduce-scatter;
+      * ``"psum"``       — K split; full all-reduce, epilogue post-psum
+        (the only row-parallel form when N % tp != 0 or a blocked shuffle
+        must see the full channel axis);
+      * ``"replicated"`` — neither dim divides: weight stays replicated.
+
+    ``tp_hint="row"`` marks a pair-second matmul (w_down after the
+    column-parallel up/gate, wo after the column-parallel qkv): forcing
+    row-parallel lets it CONSUME the model-sharded intermediate its pair
+    produced instead of all-gathering it at shard_map entry (the Megatron
+    pairing).  The hint is advisory — it only applies when K divides.
+
+    Pure and trace-free, so tests can enumerate the decision table without
+    building meshes."""
+    if tp <= 1:
+        return "replicated"
+    if collective not in TP_COLLECTIVES:
+        raise ValueError(f"unknown tp_collective {collective!r}; "
+                         f"have {TP_COLLECTIVES}")
+
+    def row_rule():
+        # scatter/ring need the output slices to divide and the epilogue
+        # to be slice-local (a blocked shuffle crosses slices)
+        if collective == "psum" or N % tp != 0 or block_perm is not None:
+            return "psum"
+        return "ring" if collective == "ring" else "scatter"
+
+    row_ok = K % tp == 0
+    if tp_hint == "row" and row_ok:
+        return row_rule()
+    if N % tp == 0 and block_perm is None:
+        return "column"
+    if row_ok:
+        return row_rule()
+    return "replicated"
 
 
 def _mesh_dims(mesh):
@@ -148,11 +213,20 @@ class Backend:
     mesh: Any = None                  # jax.sharding.Mesh | None — when set
                                       # (and > 1 device) photonic matmuls run
                                       # under shard_map on it
+    tp_collective: str = "reduce_scatter"
+                                      # row-parallel rejoin strategy (see
+                                      # TP_COLLECTIVES): "reduce_scatter"
+                                      # (default), "psum" (legacy
+                                      # comparator), "ring" (explicit
+                                      # ppermute pipeline)
 
     def __post_init__(self):
         if self.execution not in EXECUTIONS:
             raise ValueError(f"unknown execution backend "
                              f"{self.execution!r}; have {EXECUTIONS}")
+        if self.tp_collective not in TP_COLLECTIVES:
+            raise ValueError(f"unknown tp_collective "
+                             f"{self.tp_collective!r}; have {TP_COLLECTIVES}")
 
     @property
     def is_photonic(self) -> bool:
@@ -177,7 +251,7 @@ class Backend:
 
     # ------------------------------------------------------------- matmuls
     def dot(self, x, w, *, transpose: bool = False, bias=None,
-            block_perm=None, block: int = 0, activation=None):
+            block_perm=None, block: int = 0, activation=None, tp_hint=None):
         """``x @ w`` (w: (k, n)) or ``x @ w.T`` (w: (n, k)) — the weight
         matmul primitive every layer routes through — plus an optional
         blend epilogue (bias + activation + blocked output shuffle) that
@@ -185,11 +259,13 @@ class Backend:
 
         ``w`` may be a raw fp array (quantized in-step on the photonic
         backend) or a ``PreparedTensor`` bank (quantized once at
-        ``Program.build``)."""
+        ``Program.build``).  ``tp_hint="row"`` marks a pair-second matmul
+        for the sharded dispatch (see :func:`partition_rule`); it has no
+        effect off-mesh."""
         if isinstance(w, PreparedTensor):
             return self.dot_prepared(x, w, transpose=transpose, bias=bias,
                                      block_perm=block_perm, block=block,
-                                     activation=activation)
+                                     activation=activation, tp_hint=tp_hint)
         if not self.is_photonic:
             y = obu.blend_dot(x, w, transpose=transpose)
             return _epilogue_xla(y, bias, block_perm, block, activation)
@@ -202,11 +278,12 @@ class Backend:
             wq, wscale = quantize_weight(w)
         return self._photonic_matmul(x, wq, wscale, transpose=transpose,
                                      bias=bias, block_perm=block_perm,
-                                     block=block, activation=activation)
+                                     block=block, activation=activation,
+                                     tp_hint=tp_hint)
 
     def dot_prepared(self, x, prep: PreparedTensor, *,
                      transpose: bool = False, bias=None, block_perm=None,
-                     block: int = 0, activation=None):
+                     block: int = 0, activation=None, tp_hint=None):
         """``dot`` against an already-programmed bank: no in-step weight
         quantization.  The transposed orientation uses the bank's per-row
         image (``wq_t``/``scale_t``) — the same array the optical transpose
@@ -232,17 +309,19 @@ class Backend:
             wq, wscale = prep.wq, prep.scale
         return self._photonic_matmul(x, wq, wscale, transpose=transpose,
                                      bias=bias, block_perm=block_perm,
-                                     block=block, activation=activation)
+                                     block=block, activation=activation,
+                                     tp_hint=tp_hint)
 
     def _photonic_matmul(self, x, wq, wscale, *, transpose, bias,
-                         block_perm, block, activation):
+                         block_perm, block, activation, tp_hint=None):
         """Shared photonic dispatch: resolve the tile plan from the actual
         operand shapes, then run either the fused megakernel or the split
         quantize -> MVM -> blend pipeline at that same plan."""
         if self.mesh_active:
             return self._photonic_matmul_sharded(
                 x, wq, wscale, transpose=transpose, bias=bias,
-                block_perm=block_perm, block=block, activation=activation)
+                block_perm=block_perm, block=block, activation=activation,
+                tp_hint=tp_hint)
         M = 1
         for d in x.shape[:-1]:
             M *= d
@@ -266,37 +345,57 @@ class Backend:
             return _epilogue_unfused(y, bias, block_perm, block, activation)
 
     def _photonic_matmul_sharded(self, x, wq, wscale, *, transpose, bias,
-                                 block_perm, block, activation):
+                                 block_perm, block, activation,
+                                 tp_hint=None):
         """The Pallas MVM under ``shard_map`` on ``self.mesh``.
 
         XLA cannot auto-partition a ``pallas_call``, so on a real mesh every
         photonic matmul is explicitly mapped: rows (the leading batch dim)
-        split over the data axes, and the weight splits over "model" by
-        whichever partition rule its shape admits —
+        split over the data axes, and the weight splits over "model" by the
+        :func:`partition_rule` its shape (and the caller's ``tp_hint``)
+        admits —
 
-          * column-parallel (output channels % tp == 0): each shard runs the
-            kernel on its slice of the output channels, scales and bias
-            sharded alongside; no reduction collective — the sharded output
-            re-joins lazily via GSPMD (reduce-scatter/all-gather chosen
-            downstream).  Blocked output shuffles cross shard boundaries, so
-            they force the replicated-weight path instead.
-          * row-parallel (reduction dim % tp == 0): each shard computes a
-            partial MVM over its K-slice (the offset row splits with it)
-            and a ``psum`` over "model" rejoins them; the blend epilogue
-            runs post-psum.
-          * neither divides: the weight stays replicated (only rows shard).
+          * ``"column"``: each shard runs the kernel — fused epilogue and
+            all — on its slice of the output channels, scales and bias
+            sharded alongside; no reduction collective.
+          * ``"scatter"`` (row-parallel, the default rejoin): each shard
+            computes a partial MVM over its K-slice (the offset row splits
+            with it), a ``psum_scatter`` leaves it exactly its own output
+            slice — tp× less reduction traffic than the old full psum —
+            and the bias/activation epilogue runs on that 1/tp-wide slice.
+          * ``"ring"``: the same reduce-scatter spelled out as tp per-chunk
+            kernels interleaved with ``ppermute`` hops, so every transfer
+            overlaps the next chunk's compute.
+          * ``"psum"``: the legacy full all-reduce — still required when
+            the output slices don't divide or a blocked shuffle crosses
+            them, and kept as the bit-identity comparator
+            (``tp_collective="psum"``).
+          * ``"replicated"``: neither dim divides; only rows shard.
 
-        The per-tensor A8 scale is computed on the GLOBAL activation before
-        entering shard_map, so every shard quantizes on the same grid the
-        single-device kernel would use."""
+        For every rule with a model-sharded result (column, scatter, ring)
+        the out_spec leaves the output sharded: GSPMD materializes the
+        all-gather lazily at the consumer — or never, when the consumer is
+        the pair-second row-parallel matmul (``tp_hint="row"``) whose
+        x_spec wants exactly these slices — which is what overlaps the
+        gather with the next layer's kernel.
+
+        The per-tensor A8 scale is rebuilt IN-body: a local abs-max plus a
+        ``pmax`` over the axes the activation is actually split on.  Max
+        commutes with sharding, so the grid is bitwise identical to the
+        single-device scale while skipping the old outside-shard_map global
+        reduction pass."""
         mesh = self.mesh
         d_axes, dp, tp = _mesh_dims(mesh)
         dd = _data_spec_entry(d_axes)
         K = x.shape[-1]
         N = wq.shape[-2] if transpose else wq.shape[-1]
         row_shard = dp > 1 and x.ndim >= 2 and x.shape[0] % dp == 0
-        col_tp = tp > 1 and N % tp == 0 and block_perm is None
-        red_tp = tp > 1 and not col_tp and K % tp == 0
+        rule = partition_rule(tp, K, N, block_perm=block_perm,
+                              tp_hint=tp_hint,
+                              collective=self.tp_collective)
+        col_tp = rule == "column"
+        red_tp = rule in ("scatter", "ring", "psum")
+        out_sharded = rule in ("column", "scatter", "ring")
         bspec = dd if row_shard else None
         mid = (None,) * (x.ndim - 2)
         x_spec = P(bspec, *mid, "model" if red_tp else None)
@@ -307,14 +406,21 @@ class Backend:
             w_spec = P("model" if red_tp else None,
                        "model" if col_tp else None)
         ws_spec = P("model" if col_tp else None)
-        out_spec = P(bspec, *mid, "model" if col_tp else None)
-        in_specs = [x_spec, w_spec, P(), ws_spec]
-        operands = [x, wq, a8_scale(x), wscale]
+        out_spec = P(bspec, *mid, "model" if out_sharded else None)
+        in_specs = [x_spec, w_spec, ws_spec]
+        operands = [x, wq, wscale]
         has_bias = bias is not None
         if has_bias:
-            in_specs.append(P("model" if col_tp else None))
+            # column/scatter/ring epilogues see one output slice each —
+            # the bias shards with it; psum/replicated see the full axis
+            in_specs.append(P("model" if out_sharded else None))
             operands.append(bias)
+        # axes the local activation block is split over: pmax over exactly
+        # these rebuilds the global abs-max for the A8 scale
+        amax_axes = (tuple(d_axes) if row_shard else ()) + (
+            ("model",) if red_tp else ())
         fused, plan = self.fused, self.tile_plan
+        chunk = N // tp if N % tp == 0 else N
         # record the per-shard plan in the OUTER trace (the shard_map body
         # may be re-traced internally; the local shapes are deterministic)
         M = 1
@@ -324,40 +430,78 @@ class Backend:
             "sharded_fused" if fused else "sharded_split",
             *plan(M // dp if row_shard else M,
                   K // tp if red_tp else K,
-                  N // tp if col_tp else N))
+                  chunk if rule in ("column", "ring") else N))
 
-        def body(xl, wl, xsl, wsl, *rest):
+        def body(xl, wl, wsl, *rest):
             bl = rest[0] if has_bias else None
             Ml = 1
             for d in xl.shape[:-1]:
                 Ml *= d
             Kl = xl.shape[-1]
-            Nl = wl.shape[-2] if transpose else wl.shape[-1]
-            bm, bk, bn = plan(Ml, Kl, Nl)
-            if red_tp:
-                # partial MVM on this K-slice; epilogue after the psum
+            amax = jnp.max(jnp.abs(xl))
+            if amax_axes:
+                amax = jax.lax.pmax(amax, amax_axes)
+            xsl = a8_scale_from_amax(amax)
+
+            def kernel(wql, wssl, n_cols, epilogue):
+                """One per-shard Pallas call on ``n_cols`` output columns;
+                ``epilogue=False`` leaves the raw (partial) MVM for the
+                reduction collective to finish."""
+                bm, bk, bn = plan(Ml, Kl, n_cols)
                 if fused:
-                    y = ops.photonic_matmul_fused(
-                        xl, wl, wsl, x_scale=xsl, transpose=transpose,
-                        activation="none", bm=bm, bk=bk, bn=bn)
-                else:
-                    mm = (ops.photonic_matmul_prepared_t if transpose
-                          else ops.photonic_matmul_prepared)
-                    y = mm(xl, wl, wsl, bm=bm, bk=bk, bn=bn, x_scale=xsl)
+                    return ops.photonic_matmul_fused(
+                        xl, wql, wssl, x_scale=xsl, transpose=transpose,
+                        bias=bl if epilogue else None,
+                        block_perm=block_perm if epilogue else None,
+                        block=block,
+                        activation=(activation or "none") if epilogue
+                        else "none", bm=bm, bk=bk, bn=bn)
+                mm = (ops.photonic_matmul_prepared_t if transpose
+                      else ops.photonic_matmul_prepared)
+                y = mm(xl, wql, wssl, bm=bm, bk=bk, bn=bn, x_scale=xsl)
+                if epilogue:
+                    y = _epilogue_unfused(y, bl, block_perm, block,
+                                          activation)
+                return y
+
+            if rule == "scatter":
+                y = kernel(wl, wsl, N, epilogue=False)
+                y = jax.lax.psum_scatter(y, "model",
+                                         scatter_dimension=y.ndim - 1,
+                                         tiled=True)
+                # slice-local epilogue: bl is already this shard's slice
+                return _epilogue_unfused(y, bl, None, 0, activation)
+            if rule == "ring":
+                me = jax.lax.axis_index("model")
+                ring = [(i, (i + 1) % tp) for i in range(tp)]
+
+                def part(idx):
+                    # partial for output chunk ``idx`` on this K-slice
+                    w_ax = 0 if transpose else 1
+                    wc = jax.lax.dynamic_slice_in_dim(
+                        wl, idx * chunk, chunk, w_ax)
+                    wsc = jax.lax.dynamic_slice_in_dim(
+                        wsl, idx * chunk, chunk, wsl.ndim - 1)
+                    return kernel(wc, wsc, chunk, epilogue=False)
+
+                # start on the chunk owned by the downstream neighbor, send
+                # while computing the next: after tp-1 hops shard m holds
+                # the fully reduced chunk m
+                acc = part((me + tp - 1) % tp)
+                for s in range(1, tp):
+                    acc = jax.lax.ppermute(acc, "model", perm=ring)
+                    acc = acc + part((me + tp - 1 - s) % tp)
+                return _epilogue_unfused(acc, bl, None, 0, activation)
+            if rule == "psum":
+                y = kernel(wl, wsl, N, epilogue=False)
                 y = jax.lax.psum(y, "model")
                 return _epilogue_unfused(y, bl, block_perm, block,
                                          activation)
-            if fused:
-                return ops.photonic_matmul_fused(
-                    xl, wl, wsl, x_scale=xsl, transpose=transpose, bias=bl,
-                    block_perm=block_perm, block=block,
-                    activation=activation or "none", bm=bm, bk=bk, bn=bn)
-            mm = (ops.photonic_matmul_prepared_t if transpose
-                  else ops.photonic_matmul_prepared)
-            y = mm(xl, wl, wsl, bm=bm, bk=bk, bn=bn, x_scale=xsl)
-            return _epilogue_unfused(y, bl, block_perm, block, activation)
+            # column / replicated: the kernel's own fused epilogue
+            Nl = wl.shape[-2] if transpose else wl.shape[-1]
+            return kernel(wl, wsl, Nl, epilogue=True)
 
-        with jax.named_scope("photonic.sharded"):
+        with jax.named_scope(f"photonic.sharded.{rule}"):
             return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                              out_specs=out_spec, check_rep=False)(*operands)
 

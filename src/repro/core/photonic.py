@@ -60,8 +60,16 @@ def a8_scale(x: jax.Array, bits: int = 8) -> jax.Array:
     no full-tensor int8 write to HBM).  Derivation matches
     ``quantize_symmetric`` exactly so fused and split execution quantize to
     the same grid."""
+    return a8_scale_from_amax(jnp.max(jnp.abs(x)), bits=bits)
+
+
+def a8_scale_from_amax(amax: jax.Array, bits: int = 8) -> jax.Array:
+    """The amax -> scale half of :func:`a8_scale`, split out so a sharded
+    matmul body can rebuild the GLOBAL scale from a local abs-max plus a
+    ``jax.lax.pmax`` over the sharded axes (max is exact and
+    order-independent, so the result is bitwise identical to the
+    single-device scale)."""
     qmax = 2 ** (bits - 1) - 1
-    amax = jnp.max(jnp.abs(x))
     return (jnp.maximum(amax, 1e-8) / qmax).astype(jnp.float32)
 
 

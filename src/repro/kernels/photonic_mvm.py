@@ -38,14 +38,31 @@ grid step) rather than hard-coded 128s.
 rank-LOCAL — it sees one shard's operands and knows nothing about the mesh.
 XLA cannot auto-partition a ``pallas_call``, so on a >1-device mesh
 ``core/backend.py`` wraps these calls in ``shard_map`` with the collective
-chosen by the partition rule (column-parallel: no collective, the sharded
-output rejoins via GSPMD; row-parallel: ``psum`` of the per-shard partial —
-valid because the offset row and the per-column TIA scales both commute
-with the K-sum), and resolves :func:`tile_plan` on the LOCAL shapes inside
-the mapped body.  The one piece of global state a shard needs is the
-per-tensor A8 scale: the caller computes it on the global activation and
-threads it through ``kernels/ops.py`` (``x_scale=``) so every shard
-quantizes on exactly the single-device grid.
+chosen by :func:`repro.core.backend.partition_rule`:
+
+  * column-parallel — no collective; the output stays model-sharded and the
+    all-gather is *deferred* to whatever consumes it (GSPMD places it at the
+    consumer, overlapping it with unrelated compute — or elides it entirely
+    when the consumer is a ``tp_hint="row"`` pair-second matmul);
+  * row-parallel, default ``tp_collective="reduce_scatter"`` — the kernel
+    produces the full-N partial and ``psum_scatter`` reduces each output
+    slice onto its owner shard; the bias/activation epilogue then runs on
+    the 1/tp-wide slice.  Bitwise identical to the legacy ``psum`` (same
+    adds, different placement);
+  * row-parallel, ``tp_collective="ring"`` — tp chunk-kernel calls
+    interleaved with ``ppermute`` hops so each hop's transfer overlaps the
+    next chunk's matmul.  The chunk kernel re-associates XLA's elementwise
+    fusion, so ring is fp-noise-equivalent (~1 ulp), not bitwise;
+  * row-parallel ``psum`` — legacy comparator, and the fallback whenever
+    ``N % tp != 0`` or a blocked output shuffle needs the full row.
+
+The collectives are valid because the offset row and the per-column TIA
+scales both commute with the K-sum; :func:`tile_plan` resolves on the LOCAL
+shapes inside the mapped body.  The one piece of global state a shard needs
+is the per-tensor A8 scale, rebuilt *inside* the body from the local abs-max
+plus ``jax.lax.pmax`` over the sharded axes (max commutes with sharding, so
+every shard quantizes on exactly the single-device grid — see
+``photonic.a8_scale_from_amax``).
 """
 from __future__ import annotations
 

@@ -17,7 +17,13 @@ small model and gates it against the single-device reference:
   * ``--serve`` — data-parallel continuous batching over the mesh: greedy
     completions must be token-identical to unsharded solo generation;
   * ``--check-dropped`` — a deliberately misdivided dim must surface the
-    one-line PartitionReport warning from Program.build.
+    one-line PartitionReport warning from Program.build;
+  * ``--collectives`` — row-parallel collective equivalence gates:
+    ``reduce_scatter`` must be BIT-identical to the legacy ``psum`` at the
+    same tile plan (same adds, different placement), ``ring`` must sit
+    within fp noise, the post-scatter epilogue (bias / fused activation /
+    blocked shuffle) must match the unsharded backend, and the pipelined
+    decode cell must not retrace across repeated steps.
 
 Usage (tests/test_sharded_backend.py and the CI sharded-smoke job):
   REPRO_SHARD_DEVICES=8 python -m repro.launch.shardcheck \\
@@ -161,6 +167,114 @@ def check_dropped() -> list:
     return []
 
 
+def check_collectives(mesh_shape, execution: str, tol: float) -> list:
+    """Row-parallel collective equivalence gates (the reduce-scatter path).
+
+    ``reduce_scatter`` reorders *placement*, not arithmetic: each shard
+    reduces the same per-shard partials ``psum`` would, so it must be
+    bit-identical.  ``ring`` runs tp chunk-kernels instead of one full
+    kernel, which re-associates XLA's elementwise fusion — fp-noise
+    equivalent (~1 ulp), gated tightly but not bitwise.
+    """
+    from repro.core import backend as backend_lib
+
+    fails = []
+    mesh = mesh_lib.parse_mesh(mesh_shape)
+    tp = dict(mesh.shape).get("model", 1)
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, K, N = 4, 64, 64
+    x = jax.random.normal(kx, (B, 1, K), dtype=jnp.float32)
+    w = jax.random.normal(kw, (K, N), dtype=jnp.float32) / float(np.sqrt(K))
+    bias = jax.random.normal(kb, (N,), dtype=jnp.float32)
+    block = 16
+    perm = tuple(int(i) for i in
+                 np.random.default_rng(5).permutation(N // block))
+    bks = {c: backend_lib.Backend(execution, mesh=mesh, tp_collective=c)
+           for c in backend_lib.TP_COLLECTIVES}
+    ref_bk = backend_lib.Backend(execution)
+
+    def run(bk, **kw):
+        return np.asarray(
+            jax.jit(lambda xx: bk.dot(xx, w, tp_hint="row", **kw))(x))
+
+    cases = [("plain", {}),
+             ("bias+silu", dict(bias=bias, activation="silu")),
+             ("blend-shuffle", dict(bias=bias, block_perm=perm,
+                                    block=block))]
+    for label, kw in cases:
+        rule = backend_lib.partition_rule(
+            tp, K, N, block_perm=kw.get("block_perm"), tp_hint="row",
+            collective="reduce_scatter")
+        y_ref = np.asarray(
+            jax.jit(lambda xx: ref_bk.dot(xx, w, tp_hint="row", **kw))(x))
+        y_psum = run(bks["psum"], **kw)
+        y_scat = run(bks["reduce_scatter"], **kw)
+        y_ring = run(bks["ring"], **kw)
+        if not np.array_equal(y_scat, y_psum):
+            fails.append(f"collectives[{label}]: reduce_scatter not "
+                         f"bit-identical to psum (rule={rule})")
+        rel_ring = _rel_l2(y_ring, y_psum)
+        if rel_ring > 1e-5:
+            fails.append(f"collectives[{label}]: ring vs psum rel-L2 "
+                         f"{rel_ring:.2e} > 1e-5")
+        rel_ref = _rel_l2(y_scat, y_ref)
+        if rel_ref > 1e-5:
+            fails.append(f"collectives[{label}]: sharded epilogue vs "
+                         f"unsharded rel-L2 {rel_ref:.2e} > 1e-5")
+        if not fails:
+            print(f"[shardcheck] collectives[{label}] rule={rule}: "
+                  f"scatter==psum bitwise, ring rel-L2 {rel_ring:.1e}, "
+                  f"vs-unsharded rel-L2 {rel_ref:.1e}")
+
+    # --- whole-model decode: scatter vs psum logits + zero-retrace gate ---
+    cfg = small_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S, L = 4, 8, 14
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1,
+                              cfg.vocab_size)
+    logits = {}
+    prog = None
+    for c in ("psum", "reduce_scatter", "ring"):
+        prog = Program.build(cfg, params, execution=bks[c])
+        lp, cache = prog.prefill({"tokens": toks}, L)
+        d, cache = prog.decode(toks[:, :1], cache, S)
+        logits[c] = (np.asarray(lp), np.asarray(d), cache)
+    # prefill gathers at each layer boundary -> bit-identical across
+    # collectives; the decode cell defers the gather (that IS the overlap),
+    # which lets GSPMD re-partition the downstream norm reduction, so its
+    # gate is fp-noise, not bitwise
+    if not np.array_equal(logits["reduce_scatter"][0], logits["psum"][0]):
+        fails.append("prefill logits: reduce_scatter not bit-identical "
+                     "to psum")
+    rel_dec = _rel_l2(logits["reduce_scatter"][1], logits["psum"][1])
+    if rel_dec > 1e-5:
+        fails.append(f"decode logits: reduce_scatter vs psum rel-L2 "
+                     f"{rel_dec:.2e} > 1e-5")
+    if not fails:
+        print(f"[shardcheck] logits reduce_scatter vs psum: prefill "
+              f"bitwise, pipelined decode rel-L2 {rel_dec:.1e}")
+    rel_ring = _rel_l2(logits["ring"][1], logits["psum"][1])
+    # ring's ~1 ulp kernel noise can flip A8 rounding boundaries between
+    # layers, so the whole-model gate is the W8A8 parity bound, not 1e-5
+    if rel_ring > tol:
+        fails.append(f"decode logits: ring vs psum rel-L2 {rel_ring:.4f} "
+                     f"> {tol}")
+    # the pipelined decode cell (deferred-gather epilogue + act anchor)
+    # must hit the same jit cell on every step — zero retrace
+    _, d, cache = logits["reduce_scatter"]
+    prog = Program.build(cfg, params, execution=bks["reduce_scatter"])
+    before = dict(api.TRACE_COUNTS)
+    for _ in range(3):
+        d, cache = prog.decode(toks[:, 1:2], cache, S)
+    if dict(api.TRACE_COUNTS) != before:
+        fails.append(f"pipelined decode cell retraced: {before} -> "
+                     f"{dict(api.TRACE_COUNTS)}")
+    else:
+        print("[shardcheck] pipelined decode cell: zero retrace over "
+              "repeated steps")
+    return fails
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=DOC)
     ap.add_argument("--mesh", default="1x2",
@@ -172,6 +286,9 @@ def main(argv=None) -> int:
                     help="also gate DP continuous serving token-identity")
     ap.add_argument("--check-dropped", action="store_true",
                     help="also gate the PartitionReport warning")
+    ap.add_argument("--collectives", action="store_true",
+                    help="also gate reduce-scatter/ring vs psum "
+                         "equivalence and the pipelined decode cell")
     args = ap.parse_args(argv)
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     fails = check_parity(mesh_shape, args.execution, args.tol)
@@ -179,6 +296,8 @@ def main(argv=None) -> int:
         fails += check_serve(mesh_shape, args.execution)
     if args.check_dropped:
         fails += check_dropped()
+    if args.collectives:
+        fails += check_collectives(mesh_shape, args.execution, args.tol)
     for f in fails:
         print(f"[shardcheck] FAIL {f}")
     print(f"[shardcheck] {'FAIL' if fails else 'ok'}")

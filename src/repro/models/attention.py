@@ -23,14 +23,16 @@ from repro.models.layers import _dense_init, apply_rope, rope_angles
 NEG_INF = -1e30
 
 
-def _maybe_t(x, w, transpose, backend=None):
+def _maybe_t(x, w, transpose, backend=None, tp_hint=None):
     """OBU transpose where the matrix is square; identity path otherwise.
     Routed through the execution backend (xla dot_general | photonic Pallas
-    kernel, the transpose as the pre-swapped kernel variant)."""
+    kernel, the transpose as the pre-swapped kernel variant).  ``tp_hint``
+    passes through to ``Backend.dot`` — the output projections mark
+    themselves "row" so a TP mesh consumes the head-sharded context."""
     bk = resolve_backend(backend)
     if transpose and w.shape[0] == w.shape[1]:
-        return bk.dot(x, w, transpose=True)
-    return bk.dot(x, w, transpose=False)
+        return bk.dot(x, w, transpose=True, tp_hint=tp_hint)
+    return bk.dot(x, w, transpose=False, tp_hint=tp_hint)
 
 
 def _past_valid(pos, L):
@@ -140,7 +142,8 @@ def gqa_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     out = _attend_seq(q, k, v, causal)
-    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
+                  tp_hint="row")
     if cache is not None:
         ck = jax.lax.dynamic_update_slice(
             cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
@@ -200,7 +203,8 @@ def gqa_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     out = _attend_decode(q, cache["k"], cache["v"], k, v, pos)
-    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
+                  tp_hint="row")
     return y, {"k": k.astype(cache["k"].dtype),
                "v": v.astype(cache["v"].dtype)}
 
@@ -228,7 +232,8 @@ def gqa_decode_legacy(p, cfg: ModelConfig, x, cache, pos, *,
     L = ck.shape[1]
     mask = (jnp.arange(L) <= pos)[None, :]
     out = _gqa_attend(q, ck, cv, mask)
-    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
+                  tp_hint="row")
     return y, {"k": ck, "v": cv}
 
 
@@ -291,7 +296,8 @@ def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
                         axis=-1)
     q = jnp.concatenate([qn, qr], axis=-1)
     out = _attend_seq(q, k, v, causal)          # KV == H here
-    y = bk.dot(out, p["wo"].astype(x.dtype), transpose=False)
+    y = bk.dot(out, p["wo"].astype(x.dtype), transpose=False,
+               tp_hint="row")
     if cache is not None:
         cc = jax.lax.dynamic_update_slice(
             cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
@@ -339,7 +345,7 @@ def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False,
                             ckv_new.astype(x.dtype)))
     ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv)
     y = bk.dot(ctx.reshape(B, S, H * m.v_head_dim),
-               p["wo"].astype(x.dtype), transpose=False)
+               p["wo"].astype(x.dtype), transpose=False, tp_hint="row")
     return y, {"ckv": ckv_new.astype(ckv.dtype),
                "kr": kr_new.astype(kr.dtype)}
 
@@ -388,4 +394,5 @@ def cross_attn_forward(p, cfg: ModelConfig, x, kv, *, transpose=False,
     M = kv["ck"].shape[1]
     mask = jnp.ones((S, M), dtype=bool)
     out = _gqa_attend(q, kv["ck"], kv["cv"], mask)
-    return _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend)
+    return _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
+                  tp_hint="row")

@@ -103,23 +103,27 @@ def apply_mlp(p, x, act: str = "swiglu", transpose: bool = False,
         # the gate's silu rides the matmul's fused blend epilogue on the
         # photonic megakernel (one pallas_call; bit-identical to the
         # separate jax.nn.silu) and is a plain post-dot silu on xla
+        # the pair-second (ff -> d) projection carries tp_hint="row": on a
+        # TP mesh it consumes the column-sharded gate/up intermediate
+        # slice-for-slice instead of all-gathering the ff axis
         if transpose:
             g = bk.dot(x, wd, transpose=True,           # (ff, d).T : d->ff
                        activation="silu")
             u = bk.dot(x, wu, transpose=False)          # unchanged
-            return bk.dot(g * u, wg, transpose=True)    # (d, ff).T : ff->d
+            return bk.dot(g * u, wg, transpose=True,    # (d, ff).T : ff->d
+                          tp_hint="row")
         g = bk.dot(x, wg, transpose=False, activation="silu")
         u = bk.dot(x, wu, transpose=False)
-        return bk.dot(g * u, wd, transpose=False)
+        return bk.dot(g * u, wd, transpose=False, tp_hint="row")
     # gelu stays outside the kernel: its tanh/mul chain re-rounds under
     # XLA's fma contraction, so fusing it would break the fused-vs-split
     # bit-identity guarantee the serving path relies on
     wu, wd = p["w_up"], p["w_down"]
     if transpose:
         h = jax.nn.gelu(bk.dot(x, wd, transpose=True))
-        return bk.dot(h, wu, transpose=True)
+        return bk.dot(h, wu, transpose=True, tp_hint="row")
     h = jax.nn.gelu(bk.dot(x, wu, transpose=False))
-    return bk.dot(h, wd, transpose=False)
+    return bk.dot(h, wd, transpose=False, tp_hint="row")
 
 
 # ------------------------------------------------------------- embeddings

@@ -249,13 +249,19 @@ class MetricsRegistry:
     def snapshot(self) -> dict:
         """The JSON metrics block — same shape everywhere (live serving,
         serve_bench, backend_bench, dryrun), validated against
-        ``benchmarks/metrics_schema.json``."""
+        ``benchmarks/metrics_schema.json``.
+
+        Histograms that never recorded a sample (count 0) are OMITTED —
+        a registered-but-unused latency meter is declaration noise, and
+        its zero-filled quantiles read as a measured 0 in trend tooling.
+        The schema treats absent-but-empty as valid."""
         return {
             "counters": {k: c.value
                          for k, c in sorted(self._counters.items())},
             "gauges": {k: g.value for k, g in sorted(self._gauges.items())},
             "histograms": {k: h.summary()
-                           for k, h in sorted(self._histograms.items())},
+                           for k, h in sorted(self._histograms.items())
+                           if h.count > 0},
         }
 
     def to_prometheus(self) -> str:

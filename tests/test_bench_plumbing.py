@@ -1,0 +1,90 @@
+"""BENCH_decode.json plumbing: the two writers must not clobber each other.
+
+``benchmarks/backend_bench.py`` has two writers of the same file:
+
+  * ``write_bench_decode`` — the full decode ladder (bench-smoke job);
+  * ``_merge_sharded_row`` — just the sharded row (sharded-smoke job).
+
+They run in different CI jobs in either order, so each must merge-preserve
+the keys it did not measure.  The sharded-row clobber (a full-bench run
+erasing the ``sharded_decode`` row) is the regression pinned here.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+# benchmarks/ is a plain directory (no __init__) imported from the repo
+# root — mirror `python -m benchmarks.backend_bench`'s cwd-on-path setup
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+
+from benchmarks import backend_bench  # noqa: E402
+
+
+def _ladder_details():
+    return {"prepared_decode": {
+        "requantize_us": 100.0, "prepared_us": 50.0, "fused_us": 25.0,
+        "metrics_enabled_us": 26.0, "metrics_overhead_frac": 0.04,
+        "speedup": 2.0, "fused_speedup_vs_prepared": 2.0,
+        "logits_bit_identical": True,
+        "fused_vs_split_bit_identical": True,
+        "model": {"d_model": 512, "d_ff": 1024, "num_layers": 2, "B": 2},
+        "metrics": {"schema_version": 1},
+    }}
+
+
+def _sharded_details():
+    return {"sharded_decode": {
+        "mesh": {"data": 1, "model": 2}, "d_model": 512, "B": 2,
+        "sharded_fused_us": 10.0, "single_device_fused_us": 20.0,
+        "speedup_vs_single_device": 2.0, "tp_wins": True,
+        "parity_rel_l2_vs_single_device": 0.0, "within_tol": True,
+        "sweep": []}}
+
+
+def test_full_bench_rewrite_preserves_sharded_row(tmp_path):
+    path = str(tmp_path / "BENCH_decode.json")
+    backend_bench._merge_sharded_row(_sharded_details(), path)
+    backend_bench.write_bench_decode(_ladder_details(), path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["sharded_decode"]["sharded_fused_us"] == 10.0
+    assert rows["sharded_decode"]["tp_wins"] is True
+    assert rows["fused_us"] == 25.0
+
+
+def test_merge_sharded_row_preserves_ladder(tmp_path):
+    path = str(tmp_path / "BENCH_decode.json")
+    backend_bench.write_bench_decode(_ladder_details(), path)
+    backend_bench._merge_sharded_row(_sharded_details(), path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["requantize_us"] == 100.0
+    assert rows["metrics"] == {"schema_version": 1}
+    assert rows["sharded_decode"]["speedup_vs_single_device"] == 2.0
+
+
+def test_sharded_measured_in_same_run_wins(tmp_path):
+    # when the full bench DID measure a sharded row, it overwrites the
+    # stale one rather than preserving it
+    path = str(tmp_path / "BENCH_decode.json")
+    backend_bench._merge_sharded_row(_sharded_details(), path)
+    details = _ladder_details()
+    details.update(_sharded_details())
+    details["sharded_decode"]["sharded_fused_us"] = 7.0
+    backend_bench.write_bench_decode(details, path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["sharded_decode"]["sharded_fused_us"] == 7.0
+
+
+def test_write_bench_decode_tolerates_corrupt_existing(tmp_path):
+    path = str(tmp_path / "BENCH_decode.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    backend_bench.write_bench_decode(_ladder_details(), path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["fused_us"] == 25.0 and "sharded_decode" not in rows

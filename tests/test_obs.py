@@ -427,6 +427,26 @@ class TestSchema:
         bad["schema_version"] = "one"
         assert any("expected integer" in e for e in validate(bad, schema))
 
+    def test_empty_histograms_omitted_and_schema_accepts_absence(self):
+        # a registered-but-unsampled histogram must not export: its
+        # zero-filled quantiles read as a measured 0 in trend tooling.
+        # The schema accepts both the thinned dict and a snapshot with
+        # no histograms key at all (absent-but-empty is valid).
+        obs = ServingObs.create(trace=False)
+        snap = obs.snapshot()
+        assert snap["histograms"] == {}   # meters registered, no samples
+        assert validate(snap, load_schema()) == []
+        obs.tracker.on_submit(0)
+        obs.tracker.on_admit(0, 4, 8)
+        obs.tracker.on_first_token(0)
+        snap2 = obs.snapshot()
+        assert "serve.ttft_ms" in snap2["histograms"]
+        assert all(h["count"] >= 1
+                   for h in snap2["histograms"].values())
+        no_h = json.loads(json.dumps(snap))
+        del no_h["histograms"]
+        assert validate(no_h, load_schema()) == []
+
 
 # =========================================================================
 # end-to-end: continuous serving with telemetry attached

@@ -46,6 +46,49 @@ def small():
 
 
 # =====================================================================
+# in-process: the partition rule + collective knob (pure, no mesh)
+# =====================================================================
+def test_partition_rule_decision_table():
+    from repro.core.backend import partition_rule
+
+    # no model axis -> replicated, whatever else is asked for
+    assert partition_rule(1, 64, 64) == "replicated"
+    # column-parallel whenever N divides and no output shuffle
+    assert partition_rule(2, 64, 64) == "column"
+    assert partition_rule(2, 63, 64) == "column"
+    # tp_hint="row" + K divides -> row-parallel via the chosen collective
+    assert partition_rule(2, 64, 64, tp_hint="row") == "scatter"
+    assert partition_rule(2, 64, 64, tp_hint="row",
+                          collective="ring") == "ring"
+    assert partition_rule(2, 64, 64, tp_hint="row",
+                          collective="psum") == "psum"
+    # scatter/ring need N to divide too (each shard owns an output slice);
+    # otherwise row-parallel falls back to the full-psum comparator
+    assert partition_rule(2, 64, 63, tp_hint="row") == "psum"
+    # a blocked output shuffle needs the full row -> psum fallback
+    assert partition_rule(2, 64, 64, block_perm=(1, 0),
+                          tp_hint="row") == "psum"
+    # row hint with a misdivided K falls through to column, then replicated
+    assert partition_rule(2, 63, 64, tp_hint="row") == "column"
+    assert partition_rule(2, 63, 63, tp_hint="row") == "replicated"
+    # no hint, N misdivided, K divides -> row-parallel still applies
+    assert partition_rule(2, 64, 63) == "psum"
+    with pytest.raises(ValueError, match="collective"):
+        partition_rule(2, 64, 64, collective="bogus")
+
+
+def test_backend_rejects_unknown_tp_collective():
+    from repro.core.backend import Backend
+
+    with pytest.raises(ValueError, match="tp_collective"):
+        Backend("photonic", tp_collective="allreduce")
+    # the knob participates in the jit-cell cache key
+    a = Backend("photonic", tp_collective="psum")
+    b = Backend("photonic", tp_collective="reduce_scatter")
+    assert a != b and hash(a) != hash(b)
+
+
+# =====================================================================
 # in-process: the 1x1 no-op mesh contract
 # =====================================================================
 def test_make_mesh_auto_single_device():
@@ -186,19 +229,29 @@ def _run_shardcheck(args, timeout=900):
 
 def test_sharded_parity_1x2():
     """TP-only host mesh: photonic decode within the rel-L2 0.055 gate,
-    1x1 bit-identity, dropped-rule warning surfaced."""
+    1x1 bit-identity, dropped-rule warning surfaced, plus the collective
+    gates: reduce_scatter bit-identical to psum (dot-level AND prefill
+    logits), post-scatter epilogue (bias / fused activation / blocked
+    shuffle) vs unsharded, zero retrace on the pipelined decode cell."""
     out = _run_shardcheck(["--mesh", "1x2", "--execution", "photonic",
-                           "--check-dropped"])
+                           "--check-dropped", "--collectives"])
     assert "1x1 mesh bit-identical" in out
     assert "dropped-rule warning surfaced" in out
+    assert "scatter==psum bitwise" in out
+    assert "collectives[blend-shuffle]" in out
+    assert "prefill bitwise" in out
+    assert "zero retrace" in out
 
 
 def test_sharded_parity_2x2_with_dp_serving():
-    """DP x TP host mesh, plus data-parallel continuous serving
-    token-identity against unsharded solo generation."""
+    """DP x TP host mesh: data-parallel continuous serving token-identity
+    against unsharded solo generation, and the same collective gates as
+    the 1x2 run on the dp>1 mesh."""
     out = _run_shardcheck(["--mesh", "2x2", "--execution", "photonic",
-                           "--serve"])
+                           "--serve", "--collectives"])
     assert "token-identical to solo generate" in out
+    assert "scatter==psum bitwise" in out
+    assert "zero retrace" in out
 
 
 @pytest.mark.slow
