@@ -71,6 +71,19 @@ COMPONENTS = ComponentTable()
 
 
 # ------------------------------------------------------ Table 3 calibration
+def bank_cycles(shape, tile: int) -> float:
+    """Bank cycles ``u = elements / tile`` of one (rows, cols) matrix.
+
+    The single unit the Table-3 affine costs are priced in: one cycle
+    programs (write phase) or streams (compute phase) ``tile`` rings over
+    the WDM bus.  This is the ONE place the conversion lives — the meter
+    (`obs/meter.py`), the residency manager's eviction scorer
+    (`resident/manager.py`), and the hybrid-mapping planner all price
+    through it, so the accounting cannot drift between them."""
+    rows, cols = shape
+    return rows * cols / tile
+
+
 @dataclasses.dataclass(frozen=True)
 class CalibratedCost:
     # delay, ns per bank-cycle + fixed
@@ -86,18 +99,33 @@ class CalibratedCost:
 
     def write_cost(self, rows: int, cols: int, tile: int):
         """(delay_ns, energy_uJ) to program one rows x cols matrix."""
-        u = rows * cols / tile
+        u = bank_cycles((rows, cols), tile)
         return (self.t_write_slope * u + self.t_write_fixed,
                 self.e_write_slope * u + self.e_write_fixed)
 
     def compute_cost(self, rows: int, cols: int, tile: int):
         """(delay_ns, energy_uJ) for one optical MVM pass of the matrix."""
-        u = rows * cols / tile
+        u = bank_cycles((rows, cols), tile)
         return (self.t_comp_slope * u + self.t_comp_fixed,
                 self.e_comp_slope * u + self.e_comp_fixed)
 
 
 CALIBRATED = CalibratedCost()
+
+
+def unit_prices(rows: int, cols: int, tile: int,
+                model: CalibratedCost = CALIBRATED):
+    """Clamped per-event prices ``(wd_ns, we_uJ, cd_ns, ce_uJ)`` of one
+    (rows, cols) matrix: one programming and one MVM pass.
+
+    The affine fit's negative write intercept is a pipeline-fill term that
+    cancels in any full pass (module docstring); as a standalone per-event
+    price it must be non-negative, so every component clamps at 0 — only
+    active for sub-calibration toy sizes (u < 8 bank cycles).  The meter
+    and the residency manager both price events through this helper."""
+    wd, we = model.write_cost(rows, cols, tile)
+    cd, ce = model.compute_cost(rows, cols, tile)
+    return max(wd, 0.0), max(we, 0.0), max(cd, 0.0), max(ce, 0.0)
 
 
 @dataclasses.dataclass(frozen=True)

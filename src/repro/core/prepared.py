@@ -236,6 +236,34 @@ def prepare_params(params: Any, compute_dtype, photonic: bool) -> Any:
 MRR_TILE = 128   # physical crossbar tile edge (paper §2: 128x128 MRR array)
 
 
+def tiles_128(rows: int, cols: int) -> int:
+    """128x128 MRR crossbar tiles one (rows, cols) matrix occupies — the
+    unit the residency manager's array budget is denominated in."""
+    return -(-rows // MRR_TILE) * -(-cols // MRR_TILE)
+
+
+def bank_descriptors(bank: Any, prefix: str = "") -> list[dict]:
+    """One descriptor per programmed tensor of a prepared bank: pytree
+    path, logical (rows, cols) of a single matrix slice, the stacked
+    slice count (leading dims — PRM R axis, MoE experts), and the
+    128-tile occupancy.  This is what ``resident/mapping.py`` turns into
+    :class:`~repro.resident.manager.BankSpec` budget entries."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        bank, is_leaf=lambda x: isinstance(x, PreparedTensor))[0]
+    out = []
+    for path, leaf in leaves:
+        if not isinstance(leaf, PreparedTensor):
+            continue
+        k, n = int(leaf.wq.shape[-2]), int(leaf.wq.shape[-1])
+        stacked = 1
+        for d in leaf.wq.shape[:-2]:
+            stacked *= int(d)
+        out.append({"path": prefix + jax.tree_util.keystr(path),
+                    "rows": k, "cols": n, "stacked": stacked,
+                    "mrr_tiles_128": stacked * tiles_128(k, n)})
+    return out
+
+
 def prepared_stats(bank: Any) -> dict:
     """Bank accounting: programmed tensors / int8 bytes / fp leaves, plus
     the physical-programming view — how many 128x128 MRR tiles the banks
@@ -257,7 +285,7 @@ def prepared_stats(bank: Any) -> dict:
             stacked = 1
             for d in leaf.wq.shape[:-2]:
                 stacked *= int(d)
-            mrr_tiles += stacked * -(-k // MRR_TILE) * -(-n // MRR_TILE)
+            mrr_tiles += stacked * tiles_128(k, n)
         elif hasattr(leaf, "nbytes"):
             fp_bytes += leaf.nbytes
     return {"programmed_tensors": n_prog, "int8_bytes": int8_bytes,

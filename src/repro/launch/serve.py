@@ -89,6 +89,13 @@ def main(argv=None):
                     help="execution mesh: 'auto' (largest (data, model) "
                          "mesh from available devices), 'DxM' (e.g. 2x2), "
                          "or omit for single-device")
+    ap.add_argument("--array-budget", type=int, default=0,
+                    help="MRR array budget in 128x128-tile units for the "
+                         "global bank residency manager (repro.resident): "
+                         "layers hybrid-map into resident (stay programmed)"
+                         " vs streamed (reprogram-per-pass) sets under the "
+                         "budget.  0 = off (all banks statically resident, "
+                         "the legacy accounting)")
     ap.add_argument("--stats", action="store_true",
                     help="enable telemetry: periodic stats line (TTFT/TPOT "
                          "p50/p95, slot occupancy, reuse ratio, write "
@@ -136,6 +143,30 @@ def main(argv=None):
                                 or args.stats)
         metrics_lib.enable()
 
+    # global bank residency: bounded MRR array, hybrid layer mapping,
+    # cost-model eviction (repro.resident; DESIGN.md §Bank residency)
+    residency = None
+    if args.array_budget:
+        from repro import resident
+        from repro.obs.meter import StackProfile
+        specs = resident.specs_from_program(prog)
+        if not specs:        # xla execution: no prepared bank — use the
+            specs = resident.specs_from_profile(   # arch's stack profile
+                StackProfile.from_cfg(cfg), prefix=cfg.name)
+        plan = resident.plan_hybrid_mapping(specs, args.array_budget)
+        manager = resident.BankResidencyManager(
+            args.array_budget, registry=obs.registry if obs else None)
+        residency = resident.ProgramResidency(manager, specs, plan=plan)
+        print(f"[serve] residency: array budget {args.array_budget} "
+              f"x128-tiles, {len(plan.resident)}/{len(specs)} banks "
+              f"resident ({plan.used_tiles} tiles), hybrid-map est "
+              f"E -{plan.energy_savings_frac:.1%} / "
+              f"T -{plan.latency_savings_frac:.1%} vs stream-all")
+        if args.scheduler != "continuous":
+            print("[serve] WARNING --array-budget only drives the "
+                  "continuous scheduler; ignoring")
+            residency = None
+
     if args.scheduler == "engine":
         prompt = jax.random.randint(jax.random.PRNGKey(1),
                                     (args.capacity, args.max_prompt), 1,
@@ -170,7 +201,8 @@ def main(argv=None):
         sched = ContinuousScheduler(
             prog, capacity=capacity,
             max_len=args.max_prompt + args.new_tokens,
-            temperature=args.temperature, telemetry=obs)
+            temperature=args.temperature, telemetry=obs,
+            residency=residency)
     for r in reqs:
         sched.submit(r)
     t0 = time.time()
@@ -193,6 +225,7 @@ def main(argv=None):
           f"{gen} new tokens in {dt:.2f}s ({gen / dt:.1f} tok/s on CPU)")
     print(f"  slot-steps executed {st.slot_steps}, useful {st.useful_steps}, "
           f"overhead {st.overhead:.1%}")
+    rr = residency.manager.report() if residency is not None else None
     if obs is not None:
         if args.stats:
             print(obs.stats_line(getattr(sched, "stats", None)))
@@ -207,6 +240,13 @@ def main(argv=None):
                       f"(-{rep['energy_savings_frac']:.1%} E, "
                       f"-{rep['latency_savings_frac']:.1%} T vs "
                       f"reprogram-per-pass)")
+            if rr is not None:
+                print(f"  residency: hit rate {rr['hit_rate']:.3f} "
+                      f"({rr['hits']}/{rr['hits'] + rr['misses']} lookups),"
+                      f" {rr['evictions']} evictions, occupancy "
+                      f"{rr['used_tiles']}/{rr['budget_tiles']} tiles "
+                      f"({rr['occupancy_frac']:.0%}), endurance gain "
+                      f"{rr['endurance']['endurance_gain']:.1f}x")
         if args.trace_out:
             obs.tracer.save(args.trace_out)
             print(f"[serve] Chrome trace -> {args.trace_out} "

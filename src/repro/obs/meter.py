@@ -65,6 +65,12 @@ class StackProfile:
         return cls(num_physical=max(1, R), depth=max(1, depth),
                    mats_per_block=mats_per_block, rows=d, cols=d, tile=tile)
 
+    @property
+    def cycles_per_matrix(self) -> float:
+        """Bank cycles of one representative matrix — the Table-3 pricing
+        unit, via the one shared ``costmodel.bank_cycles`` helper."""
+        return costmodel.bank_cycles((self.rows, self.cols), self.tile)
+
 
 class PhotonicMeter:
     """Write-vs-reuse energy/latency ledger over the calibrated cost model.
@@ -85,27 +91,42 @@ class PhotonicMeter:
 
     def __init__(self, profile: StackProfile, *, refresh_steps: int = 8,
                  registry: _metrics.MetricsRegistry | None = None,
-                 model: costmodel.CalibratedCost = costmodel.CALIBRATED):
+                 model: costmodel.CalibratedCost = costmodel.CALIBRATED,
+                 external_writes: bool = False):
         self.profile = profile
         self.refresh_steps = max(1, refresh_steps)
         self.registry = registry or _metrics.MetricsRegistry()
         self.model = model
         p = profile
-        # per-matrix unit prices (ns, uJ) — priced once, applied per event.
-        # The affine fit's negative write intercept is a pipeline-fill term
-        # that cancels in any full pass (costmodel docstring); as a
-        # standalone per-event price it must be non-negative, so clamp —
-        # only active for sub-calibration toy sizes (u < 8 bank cycles).
-        self._wd, self._we = model.write_cost(p.rows, p.cols, p.tile)
-        self._cd, self._ce = model.compute_cost(p.rows, p.cols, p.tile)
-        self._wd = max(self._wd, 0.0)
-        self._cd = max(self._cd, 0.0)
+        # per-matrix unit prices (ns, uJ) — priced once, applied per event,
+        # with the affine negative-intercept clamp centralized in
+        # costmodel.unit_prices (only active for sub-calibration toy sizes).
+        self._wd, self._we, self._cd, self._ce = costmodel.unit_prices(
+            p.rows, p.cols, p.tile, model)
         self.bank_writes = 0          # matrices programmed (R&B schedule)
         self.matrix_passes = 0        # logical matrix MVM passes executed
         self.baseline_writes = 0      # programs the no-reuse baseline pays
         self.decode_steps = 0
+        # residency-manager feed: hits/misses on the bank cache, evictions,
+        # and writes sourced outside the meter's own schedule
+        self.resident_hits = 0
+        self.resident_misses = 0
+        self.evictions = 0
+        self.external_bank_writes = 0
         self._steps_since_refresh = 0
         self._programmed = False
+        # with external_writes=True the meter's OWN programming schedule
+        # (program-at-first-traffic + per-refresh_steps reprogram) is off:
+        # a residency manager owns the write schedule and feeds it through
+        # record_external_bank_write, so resident hits are never
+        # double-billed as refresh writes.
+        self.external_writes = bool(external_writes)
+
+    def set_external_writes(self, on: bool = True) -> None:
+        """Hand the write schedule to an external source (the residency
+        manager).  Must flip before first traffic to keep the ledger
+        consistent."""
+        self.external_writes = bool(on)
 
     # ------------------------------------------------------------ raw ledger
     def record_bank_write(self, n: int = 1) -> None:
@@ -117,6 +138,30 @@ class PhotonicMeter:
         self.baseline_writes += n       # baseline reprograms per pass
         self.registry.counter("energy.matrix_passes").inc(n)
 
+    # ------------------------------------------------- residency-manager feed
+    def record_external_bank_write(self, n: int = 1) -> None:
+        """A bank (re)programming decided OUTSIDE the meter's schedule —
+        a residency-manager install or post-eviction reprogram.  Priced
+        exactly like any other write so ``write_energy_saved_uJ`` and
+        ``reuse_ratio`` stay honest when residency is on."""
+        self.external_bank_writes += n
+        self.registry.counter("energy.external_bank_writes").inc(n)
+        self.record_bank_write(n)
+
+    def record_resident_access(self, hit: bool, n: int = 1) -> None:
+        """One residency-cache lookup: a hit is a free pass (the bank was
+        already programmed), a miss precedes an install write."""
+        if hit:
+            self.resident_hits += n
+            self.registry.counter("energy.resident_hits").inc(n)
+        else:
+            self.resident_misses += n
+            self.registry.counter("energy.resident_misses").inc(n)
+
+    def record_eviction(self, n: int = 1) -> None:
+        self.evictions += n
+        self.registry.counter("energy.evictions").inc(n)
+
     # --------------------------------------------------------- serving hooks
     def _program_banks(self) -> None:
         self.record_bank_write(self.profile.num_physical
@@ -126,8 +171,8 @@ class PhotonicMeter:
         """``rows`` activation rows ran the whole stack once."""
         if rows <= 0:
             return
-        if not self._programmed:       # first traffic programs the banks
-            self._programmed = True
+        if not self._programmed and not self.external_writes:
+            self._programmed = True    # first traffic programs the banks
             self._program_banks()
         self.record_passes(rows * self.profile.depth
                            * self.profile.mats_per_block)
@@ -138,7 +183,8 @@ class PhotonicMeter:
     def on_decode_step(self, rows: int) -> None:
         self.decode_steps += 1
         self._steps_since_refresh += 1
-        if self._steps_since_refresh >= self.refresh_steps:
+        if (self._steps_since_refresh >= self.refresh_steps
+                and not self.external_writes):
             # thermal-drift recalibration: reprogram the R basic blocks
             self._steps_since_refresh = 0
             self._program_banks()
@@ -154,6 +200,13 @@ class PhotonicMeter:
     def reuse_ratio(self) -> float:
         return (self.reuse_hits / self.matrix_passes
                 if self.matrix_passes else 0.0)
+
+    @property
+    def resident_hit_rate(self) -> float:
+        """Residency-cache hit rate over all bank lookups (0 when no
+        residency manager feeds the meter)."""
+        n = self.resident_hits + self.resident_misses
+        return self.resident_hits / n if n else 0.0
 
     def report(self) -> dict:
         """The ``energy`` block of the metrics schema, in paper units."""
@@ -188,10 +241,14 @@ class PhotonicMeter:
             "write_delay_saved_ns": max(bwd - wd, 0.0),
             "energy_savings_frac": (1.0 - e_rb / e_base) if e_base else 0.0,
             "latency_savings_frac": (1.0 - t_rb / t_base) if t_base else 0.0,
+            # residency-manager feed (zeros when residency is off)
+            "resident_hit_rate": self.resident_hit_rate,
+            "evictions": self.evictions,
         }
         g = self.registry.gauge
         g("energy.reuse_ratio").set(rep["reuse_ratio"])
         g("energy.write_energy_saved_uJ").set(rep["write_energy_saved_uJ"])
         g("energy.energy_savings_frac").set(rep["energy_savings_frac"])
         g("energy.latency_savings_frac").set(rep["latency_savings_frac"])
+        g("energy.resident_hit_rate").set(rep["resident_hit_rate"])
         return rep

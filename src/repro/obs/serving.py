@@ -208,4 +208,7 @@ class ServingObs:
                          f"{rep['write_energy_saved_uJ']:.1f}uJ "
                          f"(E -{rep['energy_savings_frac']:.1%} "
                          f"T -{rep['latency_savings_frac']:.1%})")
+            if self.meter.resident_hits + self.meter.resident_misses:
+                parts.append(f"res hit {rep['resident_hit_rate']:.3f} "
+                             f"ev {rep['evictions']}")
         return "[stats] " + " | ".join(parts)

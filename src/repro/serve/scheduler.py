@@ -140,7 +140,8 @@ class ContinuousScheduler:
                  mesh=None,
                  on_token: Optional[Callable[[int, int], None]] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 residency=None):
         # compile-once entry: pass a prebuilt ``api.Program`` as the first
         # argument (backend + prepared banks resolved exactly once, shared
         # with other schedulers); or the legacy (params, cfg) pair, which
@@ -167,6 +168,16 @@ class ContinuousScheduler:
         self.pad_id = pad_id
         self.temperature = temperature
         self.prefill_bucket = max(1, prefill_bucket)
+        # global bank residency (repro.resident): an optional
+        # ProgramResidency binding this Program's banks to a shared
+        # BankResidencyManager — resident hits are free passes, misses and
+        # evictions are priced writes.  Purely an accounting/policy layer:
+        # served tokens are identical with it on or off.
+        self.residency = residency
+        if admission is None and residency is not None:
+            from repro.resident.cosched import ResidencyAwareAdmission
+            admission = ResidencyAwareAdmission.from_base(
+                ReuseAwareAdmission.build(cfg), residency)
         self.admission = admission or ReuseAwareAdmission.build(cfg)
         self.on_token = on_token
         self.on_complete = on_complete
@@ -188,6 +199,11 @@ class ContinuousScheduler:
         # and the PhotonicMeter write-vs-reuse energy ledger.  The stats
         # counters share its registry so one snapshot carries everything.
         self.obs = telemetry
+        if (self.residency is not None and self.obs is not None
+                and self.obs.meter is not None):
+            # hand the meter's write schedule to the residency manager so
+            # resident hits are never double-billed as refresh writes
+            self.residency.bind_meter(self.obs.meter)
         self.stats = ContinuousStats(
             registry=telemetry.registry if telemetry else None,
             _capacity=capacity)
@@ -257,6 +273,10 @@ class ContinuousScheduler:
             if self.obs.meter is not None:
                 # the prefill streams `bucket` positions through the stack
                 self.obs.meter.on_prefill(bucket)
+        if self.residency is not None:
+            # the banks must be programmed for this prefill pass: resident
+            # hits ride free, misses install (priced into the meter)
+            self.residency.on_prefill(bucket)
         toks = np.full((1, bucket), self.pad_id, np.int32)
         toks[0, :plen] = req.prompt
         batch = {"tokens": jnp.asarray(toks)}
@@ -319,6 +339,8 @@ class ContinuousScheduler:
             # idle slots ride along padded (that waste is what the
             # occupancy histogram + idle_fraction expose)
             self.obs.meter.on_decode_step(self.pool.capacity)
+        if self.residency is not None:
+            self.residency.on_decode_step(self.pool.capacity)
         tr = self.obs.tracer if self.obs else None
         with (tr.span("decode_step", active=len(active),
                       capacity=self.pool.capacity)
