@@ -154,6 +154,78 @@ def simulate(trace, profiles, specs, budget_tiles: int, *,
     return rows, meters, manager
 
 
+def simulate_drift(trace, profiles, specs, budget_tiles: int, *,
+                   window: int = 32, writes_per_access: float = 2e4,
+                   calibrate_every: int = 32, drift_tol_nm: float = 0.25,
+                   registry=None):
+    """Fourth policy (``--drift``): the residency schedule of
+    :func:`simulate` rerun with write-age drift accumulating on resident
+    banks and a periodic calibration sweep repairing the stale ones.
+
+    Residency keeps banks programmed across requests — exactly the banks
+    whose rings age in place.  Every ``calibrate_every`` requests each
+    resident bank's age (``DriftClock`` over the manager's access log,
+    ``writes_per_access`` hold/refresh cycles per request touch) is checked
+    against the age at which ``core/aging.py`` expects ``drift_tol_nm`` of
+    resonance drift; beyond it the bank is reprogrammed in place, priced
+    once through ``PhotonicMeter.record_calibration_write``.  The returned
+    row is the residency ledger WITH those maintenance writes, so the
+    headline savings stay honest about what keeping banks hot costs."""
+    from repro.core import aging
+    from repro.obs.meter import PhotonicMeter
+    from repro.resident import BankResidencyManager, DriftClock
+    from repro.resident.cosched import group_by_affinity
+
+    names = sorted(profiles)
+    stale_age = aging.writes_for_drift_nm(drift_tol_nm)
+    manager = BankResidencyManager(budget_tiles, registry=registry)
+    clock = DriftClock(manager, writes_per_access=writes_per_access)
+    meters = {n: PhotonicMeter(profiles[n], external_writes=True,
+                               registry=registry) for n in names}
+    arch_of = {s.key: n for n, sp in specs.items() for s in sp}
+    writes = {n: 0 for n in names}
+    cal_writes = {n: 0 for n in names}
+    ordered = group_by_affinity(trace, lambda t: t[0], window=window)
+    for i, (arch, rows_) in enumerate(ordered):
+        m = meters[arch]
+        p = profiles[arch]
+        m.record_passes(rows_ * p.depth * p.mats_per_block)
+        for spec in specs[arch]:
+            acc = manager.access(spec)
+            m.record_resident_access(acc.hit)
+            if acc.writes:
+                m.record_external_bank_write(acc.writes)
+                writes[arch] += acc.writes
+        if calibrate_every and (i + 1) % calibrate_every == 0:
+            for n, sp in specs.items():
+                for spec in sp:
+                    if not manager.is_resident(spec.key):
+                        continue
+                    if clock.age_writes(spec.key) <= stale_age:
+                        continue
+                    meters[arch_of[spec.key]].record_calibration_write(
+                        spec.mats)
+                    manager.record_calibration(spec)
+                    clock.reset(spec.key)
+                    cal_writes[n] += spec.mats
+    passes = {n: 0 for n in names}
+    for arch, rows_ in trace:
+        p = profiles[arch]
+        passes[arch] += rows_ * p.depth * p.mats_per_block
+    total = {n: writes[n] + cal_writes[n] for n in names}
+    rep = manager.report()
+    row = {**ledger(total, passes, arch_prices(profiles)),
+           "calibration_writes_mats": int(sum(cal_writes.values())),
+           "calibration_writes_frac":
+               sum(cal_writes.values()) / max(sum(total.values()), 1),
+           "hit_rate": rep["hit_rate"],
+           "stale_age_writes": stale_age,
+           "writes_per_access": writes_per_access,
+           "calibrate_every": calibrate_every,
+           "drift_tol_nm": drift_tol_nm}
+    return row, manager
+
+
 def savings(rows: dict) -> dict:
     base, stat, res = (rows["reprogram_per_pass"], rows["static"],
                        rows["residency"])
@@ -177,10 +249,40 @@ def savings(rows: dict) -> dict:
     }
 
 
+def write_bench_residency(details: dict, path: str = "BENCH_residency.json"):
+    """Merge-preserving writer (the ``backend_bench.write_bench_decode``
+    contract): keys an existing file holds but this run did not measure —
+    e.g. a ``--drift`` row written by another CI job — survive the rewrite,
+    and a corrupt existing file is replaced rather than crashed on."""
+    rows: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                rows = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            rows = {}
+    rows.update(details)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small trace (CI gate); same policies and gates")
+    ap.add_argument("--drift", action="store_true",
+                    help="also rerun the residency policy with write-age "
+                         "drift + periodic calibration, reporting savings "
+                         "INCLUDING the calibration write overhead")
+    ap.add_argument("--writes-per-access", type=float, default=2e4,
+                    help="hold/refresh write cycles one request touch "
+                         "ages a resident bank by (--drift)")
+    ap.add_argument("--calibrate-every", type=int, default=32,
+                    help="calibration sweep period in requests (--drift)")
+    ap.add_argument("--drift-tol-nm", type=float, default=0.25,
+                    help="expected-drift budget before a resident bank "
+                         "is reprogrammed (--drift)")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--budget-tiles", type=int, default=0,
                     help="array budget in 128-tile units "
@@ -224,6 +326,37 @@ def main(argv=None):
           f"{rows['residency']['evictions']} evictions, budget {budget} "
           f"tiles")
 
+    drift_row = None
+    if args.drift:
+        drift_row, _mgr2 = simulate_drift(
+            trace, profiles, specs, budget, window=args.window,
+            writes_per_access=args.writes_per_access,
+            calibrate_every=args.calibrate_every,
+            drift_tol_nm=args.drift_tol_nm)
+        base = rows["reprogram_per_pass"]
+        # stored on the row too, so a later non---drift rewrite (which
+        # rebuilds the top-level "savings" dict) can't lose them
+        drift_row["vs_reprogram_energy_frac"] = (
+            1.0 - drift_row["energy_uJ"] / base["energy_uJ"])
+        drift_row["vs_reprogram_latency_frac"] = (
+            1.0 - drift_row["delay_ns"] / base["delay_ns"])
+        sav["residency_calibrated_vs_reprogram_energy_frac"] = \
+            drift_row["vs_reprogram_energy_frac"]
+        sav["residency_calibrated_vs_reprogram_latency_frac"] = \
+            drift_row["vs_reprogram_latency_frac"]
+        print(f"residency_calibrated,0.0,E {drift_row['energy_uJ']:.0f}uJ "
+              f"T {drift_row['delay_ns'] / 1e6:.2f}ms "
+              f"({drift_row['calibration_writes_mats']} calibration writes "
+              f"= {drift_row['calibration_writes_frac']:.1%} of "
+              f"{drift_row['writes_mats']} total); savings incl. "
+              f"calibration: E "
+              f"-{sav['residency_calibrated_vs_reprogram_energy_frac']:.1%}"
+              f" T "
+              f"-{sav['residency_calibrated_vs_reprogram_latency_frac']:.1%}"
+              f" (paper headline "
+              f"-{PAPER_HEADLINE['energy_savings_frac']:.0%} / "
+              f"-{PAPER_HEADLINE['latency_savings_frac']:.0%})")
+
     # ---- gates (the ISSUE-8 acceptance) ---------------------------------
     assert sav["residency_vs_reprogram_write_energy_frac"] > 0, (
         "residency must beat reprogram-per-pass on simulated write energy "
@@ -232,6 +365,17 @@ def main(argv=None):
         "residency-on must beat residency-off (static PRM reuse) on total "
         f"simulated latency: {rows['residency']['delay_ns']:.0f}ns vs "
         f"{rows['static']['delay_ns']:.0f}ns")
+    if drift_row is not None:
+        # the ISSUE-9 honesty gate: residency must still beat
+        # reprogram-per-pass AFTER paying for the calibration writes that
+        # keeping banks resident makes necessary
+        assert drift_row["calibration_writes_mats"] > 0, (
+            "--drift ran but no bank ever went stale — raise "
+            "--writes-per-access or lower --drift-tol-nm")
+        assert sav["residency_calibrated_vs_reprogram_energy_frac"] > 0, (
+            "residency incl. calibration overhead must still beat "
+            "reprogram-per-pass on energy (got "
+            f"{sav['residency_calibrated_vs_reprogram_energy_frac']:.3f})")
 
     # ---- schema'd metrics snapshot (one exporter shape for everything) --
     manager.report()                       # refresh residency.* gauges
@@ -255,8 +399,9 @@ def main(argv=None):
         "paper_headline": PAPER_HEADLINE,
         "metrics": snap,
     }
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
+    if drift_row is not None:
+        out["residency_calibrated"] = drift_row
+    write_bench_residency(out, args.out)
     print(f"\n# results written to {args.out}")
 
 

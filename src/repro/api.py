@@ -332,6 +332,18 @@ class Program:
         """The execution mesh (None: unsharded single-device semantics)."""
         return getattr(self.backend, "mesh", None)
 
+    def update_noise(self, noise) -> None:
+        """Swap the fault-model config on the live Program (in place).
+
+        The calibration loop's republish step: after a drift repair it
+        installs a ``NoiseConfig`` with fresh per-bank ages via
+        ``noise.with_bank_ages``.  ``Backend`` is a static jit key, so the
+        replace retraces exactly the step cells that run under the new
+        config — the banks, caches, and every other cell stay untouched.
+        ``Backend.__post_init__`` re-runs, so noise + multi-device mesh is
+        rejected here too."""
+        self.backend = dataclasses.replace(self.backend, noise=noise)
+
     # -------------------------------------------------------------- stats
     def bank_stats(self) -> dict:
         return prepared_lib.prepared_stats(self.bank)

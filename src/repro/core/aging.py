@@ -43,6 +43,24 @@ def expected_drift_nm(writes: float, cfg: AgingConfig = AgingConfig()):
     return (rw + bias) / 1e3
 
 
+def writes_for_drift_nm(target_nm: float,
+                        cfg: AgingConfig = AgingConfig()) -> float:
+    """Inverse of :func:`expected_drift_nm`: the write-cycle age at which
+    expected drift reaches ``target_nm`` (geometric bisection — the model
+    is monotone).  Used by ``benchmarks/drift_bench.py`` to pick the age
+    ladder for a target accuracy impact."""
+    if target_nm <= 0:
+        return 0.0
+    lo, hi = 1.0, 1e15
+    for _ in range(200):
+        mid = math.sqrt(lo * hi)
+        if expected_drift_nm(mid, cfg) > target_nm:
+            hi = mid
+        else:
+            lo = mid
+    return lo
+
+
 def endurance_writes(cfg: AgingConfig = AgingConfig()) -> float:
     """Write cycles until expected drift exceeds the tolerance."""
     lo, hi = 1.0, 1e15

@@ -219,6 +219,13 @@ class Backend:
                                       # (default), "psum" (legacy
                                       # comparator), "ring" (explicit
                                       # ppermute pipeline)
+    noise: Any = None                 # core.noise.NoiseConfig | None — the
+                                      # opt-in photonic fault model.  Being
+                                      # a Backend field makes it a static
+                                      # jit-cell key like mesh/tp_collective:
+                                      # republishing drift ages retraces the
+                                      # affected cells; None / all-zero is
+                                      # bit-identical to the clean path.
 
     def __post_init__(self):
         if self.execution not in EXECUTIONS:
@@ -227,10 +234,26 @@ class Backend:
         if self.tp_collective not in TP_COLLECTIVES:
             raise ValueError(f"unknown tp_collective "
                              f"{self.tp_collective!r}; have {TP_COLLECTIVES}")
+        if self.noise_active and self.mesh_active:
+            # the fault model perturbs the full output-channel axis; under
+            # shard_map each shard sees a slice and the per-tile PRNG streams
+            # would diverge from the single-device pattern — model it
+            # single-device first (Program.build's replace() re-runs this)
+            raise NotImplementedError(
+                "NoiseConfig injection is single-device only; drop the "
+                "noise or the multi-device mesh")
 
     @property
     def is_photonic(self) -> bool:
         return self.execution == "photonic"
+
+    @property
+    def noise_active(self) -> bool:
+        """True when the fault model actually perturbs: photonic execution
+        AND an enabled config.  Always False on xla — the fault model is a
+        property of the photonic substrate, not of the math."""
+        return (self.is_photonic and self.noise is not None
+                and self.noise.enabled)
 
     @property
     def mesh_active(self) -> bool:
@@ -279,7 +302,7 @@ class Backend:
         return self._photonic_matmul(x, wq, wscale, transpose=transpose,
                                      bias=bias, block_perm=block_perm,
                                      block=block, activation=activation,
-                                     tp_hint=tp_hint)
+                                     tp_hint=tp_hint, bank_tag=None)
 
     def dot_prepared(self, x, prep: PreparedTensor, *,
                      transpose: bool = False, bias=None, block_perm=None,
@@ -310,13 +333,21 @@ class Backend:
         return self._photonic_matmul(x, wq, wscale, transpose=transpose,
                                      bias=bias, block_perm=block_perm,
                                      block=block, activation=activation,
-                                     tp_hint=tp_hint)
+                                     tp_hint=tp_hint, bank_tag=prep.tag)
 
     def _photonic_matmul(self, x, wq, wscale, *, transpose, bias,
-                         block_perm, block, activation, tp_hint=None):
+                         block_perm, block, activation, tp_hint=None,
+                         bank_tag=None):
         """Shared photonic dispatch: resolve the tile plan from the actual
         operand shapes, then run either the fused megakernel or the split
-        quantize -> MVM -> blend pipeline at that same plan."""
+        quantize -> MVM -> blend pipeline at that same plan.
+
+        With an enabled fault model (``self.noise``), the call reroutes to
+        the noisy split pipeline — bit-exact MVM, ``core/noise.py``
+        perturbation on the raw output, then the unfused epilogue.
+        ``bank_tag`` (the PreparedTensor's stable path hash; None for
+        in-step-quantized raw weights) keys the bank's PRNG streams and
+        selects its per-bank drift age."""
         if self.mesh_active:
             return self._photonic_matmul_sharded(
                 x, wq, wscale, transpose=transpose, bias=bias,
@@ -328,6 +359,14 @@ class Backend:
         K = x.shape[-1]
         N = wq.shape[-2] if transpose else wq.shape[-1]
         bm, bk, bn = self.tile_plan(M, K, N)
+        if self.noise_active:
+            _metrics.record_kernel_call("noisy", bm, bk, bn)
+            with jax.named_scope(f"photonic.noisy.{bm}x{bk}x{bn}"):
+                y = ops.photonic_matmul_noisy(
+                    x, wq, wscale, noise=self.noise, bank_tag=bank_tag,
+                    transpose=transpose, bm=bm, bk=bk, bn=bn)
+                return _epilogue_unfused(y, bias, block_perm, block,
+                                         activation)
         # trace-time kernel-call ledger: dispatch runs under jit trace, so
         # this counts the Pallas calls compiled into each cell, once per
         # (re)trace, keyed by the resolved tile plan
@@ -522,7 +561,8 @@ class Backend:
             w.shape[-1])
         _metrics.record_kernel_call("reuse", bm, bk, bn)
         with jax.named_scope(f"photonic.reuse.{bm}x{bn}"):
-            return ops.reuse_resident_matmul(x_stack, w, bm=bm, bn=bn)
+            y = ops.reuse_resident_matmul(x_stack, w, bm=bm, bn=bn)
+            return self._perturb_reuse(y, bank_tag=None)
 
     def reuse_dot_prepared(self, x_stack, prep: PreparedTensor):
         """Reuse-resident matmul against a programmed bank (the fully
@@ -539,8 +579,20 @@ class Backend:
             prep.shape[-1])
         _metrics.record_kernel_call("reuse", bm, bk, bn)
         with jax.named_scope(f"photonic.reuse.{bm}x{bn}"):
-            return ops.reuse_resident_matmul_prepared(
+            y = ops.reuse_resident_matmul_prepared(
                 x_stack, prep.wq, prep.scale, bm=bm, bn=bn)
+            return self._perturb_reuse(y, bank_tag=prep.tag)
+
+    def _perturb_reuse(self, y, *, bank_tag):
+        """Fault-model hook for the reuse-resident paths: one programmed
+        bank serves all T streams, so one perturbation pattern (keyed by the
+        bank tag) applies across the whole stack — physically, every stream
+        passes the SAME drifted rings.  No-op when noise is disabled."""
+        if not self.noise_active:
+            return y
+        from repro.core import noise as _noise
+        return _noise.perturb_mvm_output(y, self.noise, tag=bank_tag,
+                                         transpose=False)
 
     def _reuse_dot_sharded(self, x_stack, wq, wscale):
         """Reuse-resident kernel under shard_map: the programmed bank splits

@@ -222,7 +222,8 @@ def table2_row(method: str, *, M: int, N: int, K: int, C: int, B: int,
 
 # ------------------------------------------------------------ Fig 1 breakdown
 def energy_breakdown(cost: CostBreakdown, calibration_fraction: float = 0.5,
-                     comp: ComponentTable = COMPONENTS) -> dict:
+                     comp: ComponentTable = COMPONENTS,
+                     meter_report: dict | None = None) -> dict:
     """Decompose a CostBreakdown into the Fig.-1 stacked bars.
 
     Write energy splits into *programming* (thermal hold) and *calibration*
@@ -230,7 +231,18 @@ def energy_breakdown(cost: CostBreakdown, calibration_fraction: float = 0.5,
     energy to the nonlinear mapping, which pins calibration_fraction ~ 0.5 of
     the write phase for the no-reuse MLP-Mixer workload).  Compute energy
     splits by the Table-1 static powers of the data-path components.
+
+    ``meter_report`` (a ``PhotonicMeter.report()`` dict) upgrades the static
+    split to a MEASURED one: when the served trace actually ran a
+    calibration loop, its calibration share of the write ledger
+    (``calibration_writes / bank_writes``) replaces the 0.5 prior.  A report
+    with no writes (or one predating the calibration counters) falls back
+    to the static fraction, so pre-calibration callers see identical output.
     """
+    if meter_report is not None and meter_report.get("bank_writes", 0) > 0 \
+            and "calibration_writes" in meter_report:
+        calibration_fraction = (meter_report["calibration_writes"]
+                                / meter_report["bank_writes"])
     prog = cost.write_energy_uJ * (1.0 - calibration_fraction)
     calib = cost.write_energy_uJ * calibration_fraction
     # data-path split proportional to component power draw

@@ -1,0 +1,270 @@
+"""Photonic fault model — opt-in hardware-honest noise on the MVM path.
+
+The kernels in ``kernels/photonic_mvm.py`` are bit-exact W8A8: an idealized
+crossbar whose programmed transmission never moves.  Real Si-MRR arrays are
+not (Ohno et al. measure every term below on hardware; ROSA builds its
+hybrid-mapping argument on the same gap):
+
+  * **per-tile gain error** — fabrication + thermal-tuning inaccuracy makes
+    each 128x128 MRR tile's effective TIA gain deviate from calibration
+    (static per bank: it was there at programming time);
+  * **write-age drift** — every programming/hold cycle stresses the heater;
+    the accumulated resonance drift (``core/aging.py::expected_drift_nm``)
+    detunes the rings and reads as a slowly growing gain error, so the
+    magnitude here is ``drift_gain_per_nm * expected_drift_nm(age)`` with
+    the *age* in write cycles sourced from the residency manager's access
+    log (``resident/manager.py::DriftClock``);
+  * **crosstalk** — neighboring output channels couple through adjacent
+    rings/waveguides (input-dependent: the leaked power is the neighbor's
+    signal);
+  * **DAC/TIA noise** — additive readout noise in output-LSB units.
+
+**PRNG key derivation** (DESIGN.md §Noise & calibration): every draw is
+deterministic from ``(seed, bank tag, orientation, stream, tile index)``
+via ``jax.random.fold_in`` chains, so a run replays bit-identically and two
+banks (or the two OBU orientations of one bank) never share error patterns.
+The drift *direction* is a fixed per-(bank, tile) draw — physically the
+deterministic (VBTI-like) bias dominates accumulated drift, so each ring
+detunes along a consistent direction — and ``expected_drift_nm`` scales its
+*magnitude* continuously, which makes realized drift exactly monotone in
+write age (property-tested in tests/test_noise.py) and lets a calibration
+reprogram (age -> 0) cancel it completely.  ``writes_per_epoch`` is NOT a
+PRNG input: it is the calibration loop's age-quantization granularity,
+bounding how often republished ``bank_ages`` retrace the jit cells.
+
+The model perturbs the **raw MVM output** (after the offset recompose +
+TIA rescale, before the electronic blend epilogue) — the Pallas kernels
+themselves stay bit-exact, and ``NoiseConfig()`` (all zeros, the default)
+is bit-identical to the clean path.  ``core/photonic.py`` carries an older
+per-write weight-noise knob (``PhotonicConfig.write_noise_sigma``) for the
+jnp oracle simulator; this module is the serving-path counterpart.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aging as aging_lib
+
+MRR_TILE = 128        # physical tile edge (kept in sync with core/prepared)
+
+# fold_in stream tags — one sub-stream per error source
+_STREAM_STATIC = 0    # fabrication gain error (age-independent)
+_STREAM_DRIFT = 1     # write-age drift direction (fixed; magnitude ~ age)
+_STREAM_DAC = 2       # additive readout noise
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseConfig:
+    """Hashable fault-model description, carried on ``Backend.noise``.
+
+    Because ``Backend`` is a static jit argument, the config participates
+    in every jit-cell key exactly like ``mesh``/``tp_collective``: changing
+    it (e.g. the calibration loop republishing ``bank_ages``) retraces the
+    affected cells — acceptable for rare calibration epochs, free for the
+    default (disabled) config.
+
+    ``bank_ages`` maps bank tags (``PreparedTensor.tag``) to write ages;
+    banks without an entry use the global ``age_writes``.  Stored as a
+    sorted tuple of pairs so the config stays hashable.
+    """
+
+    gain_sigma: float = 0.0          # static per-tile gain error (rel.)
+    crosstalk: float = 0.0           # neighbor-channel coupling fraction
+    dac_sigma: float = 0.0           # additive noise, output LSBs
+    drift_gain_per_nm: float = 0.05  # gain error per nm of resonance drift
+    age_writes: float = 0.0          # default write age (drift source)
+    bank_ages: tuple = ()            # ((tag, age_writes), ...) overrides
+    writes_per_epoch: float = 1e5    # calibration age-republish granularity
+    seed: int = 0
+    aging: aging_lib.AgingConfig = aging_lib.AgingConfig()
+
+    def __post_init__(self):
+        for f in ("gain_sigma", "crosstalk", "dac_sigma",
+                  "drift_gain_per_nm", "age_writes", "writes_per_epoch"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"NoiseConfig.{f} must be >= 0, got "
+                                 f"{getattr(self, f)}")
+        for pair in self.bank_ages:
+            if len(pair) != 2:
+                raise ValueError(f"bank_ages entries must be (tag, age) "
+                                 f"pairs, got {pair!r}")
+
+    # ------------------------------------------------------------- queries
+    @property
+    def enabled(self) -> bool:
+        """False for the all-zero default — the bit-identity contract:
+        a disabled config never touches the clean kernel output."""
+        drift_on = self.drift_gain_per_nm > 0 and (
+            self.age_writes > 0 or any(a > 0 for _, a in self.bank_ages))
+        return (self.gain_sigma > 0 or self.crosstalk > 0
+                or self.dac_sigma > 0 or drift_on)
+
+    def age_for(self, tag) -> float:
+        """Write age of bank ``tag`` (None / unknown tag: the global age)."""
+        if tag is not None:
+            for t, a in self.bank_ages:
+                if t == tag:
+                    return float(a)
+        return float(self.age_writes)
+
+    def drift_sigma(self, age_writes: float) -> float:
+        """Gain-error magnitude the accumulated drift at ``age_writes``
+        write cycles induces — deterministic and monotone in age (the
+        detuning only grows between calibrations)."""
+        return self.drift_gain_per_nm * aging_lib.expected_drift_nm(
+            max(float(age_writes), 0.0), self.aging)
+
+    def with_bank_ages(self, ages: dict) -> "NoiseConfig":
+        """New config with per-bank write ages (the calibration loop's
+        republish step).  ``ages`` maps tag -> age_writes; sorted into a
+        tuple so the result stays hashable/deterministic."""
+        pairs = tuple(sorted((int(t), float(a)) for t, a in ages.items()))
+        return dataclasses.replace(self, bank_ages=pairs)
+
+    # --------------------------------------------------------------- parse
+    @classmethod
+    def parse(cls, spec: str) -> "NoiseConfig":
+        """CLI form: ``"gain=0.01,ct=0.002,dac=0.25,drift=0.05,age=1e6"``
+        (``launch/serve.py --noise`` / ``launch/dryrun.py --noise``)."""
+        alias = {"gain": "gain_sigma", "g": "gain_sigma",
+                 "ct": "crosstalk", "xt": "crosstalk",
+                 "crosstalk": "crosstalk",
+                 "dac": "dac_sigma",
+                 "drift": "drift_gain_per_nm",
+                 "age": "age_writes",
+                 "epoch": "writes_per_epoch",
+                 "seed": "seed"}
+        kw = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(f"--noise entries are key=value, got "
+                                 f"{item!r}")
+            k, v = item.split("=", 1)
+            field = alias.get(k.strip())
+            if field is None:
+                raise ValueError(f"unknown --noise key {k.strip()!r}; have "
+                                 f"{sorted(set(alias))}")
+            kw[field] = int(v) if field == "seed" else float(v)
+        return cls(**kw)
+
+
+# =========================================================================
+# deterministic per-tile draws
+# =========================================================================
+def _bank_key(cfg: NoiseConfig, tag, transpose: bool):
+    """Base key of one (bank, orientation): seed -> tag -> orientation."""
+    key = jax.random.PRNGKey(cfg.seed)
+    key = jax.random.fold_in(key, (0 if tag is None else int(tag))
+                             & 0x7FFFFFFF)
+    return jax.random.fold_in(key, 1 if transpose else 0)
+
+
+def _tile_eps(key, n_tiles: int):
+    """One standard-normal draw per 128-column tile, each from its own
+    ``fold_in(key, tile_index)`` — the literal (bank, stream, tile) key
+    derivation the replayability contract names."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_tiles, dtype=jnp.uint32))
+    return jax.vmap(lambda k: jax.random.normal(k, ()))(keys)
+
+
+def channel_gains(cfg: NoiseConfig, n_channels: int, *, tag=None,
+                  transpose: bool = False, age_writes=None,
+                  include_static: bool = True, tile: int = MRR_TILE):
+    """Per-output-channel multiplicative gain of one bank orientation:
+    ``1 + gain_sigma*eps_tile + drift_sigma(age)*eps_tile_drift``, each
+    eps constant across a 128-wide tile and the drift direction a fixed
+    per-(bank, tile) draw (magnitude alone carries the age dependence, so
+    realized drift is monotone in age).  ``age_writes`` overrides the
+    config's age for this bank (the calibration loop reads live ages from
+    the drift clock); ``include_static=False`` drops the fabrication term
+    (used by the read-back, which compares against the post-programming
+    reference where the static part was calibrated away)."""
+    n_tiles = -(-int(n_channels) // tile)
+    key = _bank_key(cfg, tag, transpose)
+
+    def tilewise(k):
+        return jnp.repeat(_tile_eps(k, n_tiles), tile)[:n_channels]
+
+    g = jnp.ones((n_channels,), jnp.float32)
+    if include_static and cfg.gain_sigma > 0:
+        g = g + cfg.gain_sigma * tilewise(
+            jax.random.fold_in(key, _STREAM_STATIC))
+    age = cfg.age_for(tag) if age_writes is None else float(age_writes)
+    ds = cfg.drift_sigma(age)
+    if ds > 0:
+        g = g + ds * tilewise(jax.random.fold_in(key, _STREAM_DRIFT))
+    return g
+
+
+# =========================================================================
+# the perturbation (applied to the raw MVM output)
+# =========================================================================
+def perturb_mvm_output(y, cfg: NoiseConfig, *, tag=None,
+                       transpose: bool = False, age_writes=None):
+    """Apply the fault model to a raw photonic MVM output ``y`` (..., N).
+
+    Order mirrors the physical signal chain: the per-tile gain (static +
+    drift) scales the optical output, neighboring channels couple a
+    ``crosstalk`` fraction of each other's signal, and the TIA/ADC adds
+    ``dac_sigma`` LSBs of noise.  Disabled config: returns ``y`` untouched
+    (bit-identity).  All branching is on static python floats, so the
+    function traces cleanly inside the jitted step cells."""
+    if not cfg.enabled:
+        return y
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    g = channel_gains(cfg, y.shape[-1], tag=tag, transpose=transpose,
+                      age_writes=age_writes)
+    yf = yf * g
+    if cfg.crosstalk > 0:
+        pad = [(0, 0)] * (yf.ndim - 1)
+        left = jnp.pad(yf, pad + [(1, 0)])[..., :-1]    # channel n-1
+        right = jnp.pad(yf, pad + [(0, 1)])[..., 1:]    # channel n+1
+        yf = yf + cfg.crosstalk * 0.5 * (left + right)
+    if cfg.dac_sigma > 0:
+        lsb = jnp.max(jnp.abs(yf)) / 127.0
+        nk = jax.random.fold_in(_bank_key(cfg, tag, transpose), _STREAM_DAC)
+        yf = yf + cfg.dac_sigma * lsb * jax.random.normal(nk, yf.shape)
+    return yf.astype(dt)
+
+
+# =========================================================================
+# calibration read-back
+# =========================================================================
+def readback_gain_error(prep, cfg: NoiseConfig, *, age_writes=None) -> float:
+    """Re-measure a programmed bank's W0 checksums under its current drift
+    and return the worst relative deviation from the stored reference.
+
+    The stored checksums (``w0_colsum`` / ``w0_rowsum_t``) were read back
+    right after programming, i.e. *with* the static fabrication gain folded
+    in — programming calibrates it away.  What a later read-back sees is the
+    stored value scaled by the gain accumulated SINCE: the drift component
+    only.  Both sums are linear in per-channel transmission, so the relative
+    checksum deviation IS the per-channel drift gain deviation — a stale
+    threshold maps directly onto a gain-error tolerance.  Crosstalk and DAC
+    noise are input-dependent / zero-mean and invisible to this static
+    read-back (documented limitation; they bound accuracy, not staleness).
+
+    Concrete (host-side) float — the calibration loop thresholds on it."""
+    tag = getattr(prep, "tag", None)
+    worst = 0.0
+    for transpose, ref in ((False, prep.w0_colsum),
+                           (True, getattr(prep, "w0_rowsum_t", None))):
+        if ref is None:
+            continue
+        n = int(ref.shape[-1])
+        g_now = channel_gains(cfg, n, tag=tag, transpose=transpose,
+                              age_writes=age_writes)
+        g_prog = channel_gains(cfg, n, tag=tag, transpose=transpose,
+                               age_writes=0.0)
+        measured = ref * (g_now / jnp.maximum(jnp.abs(g_prog), 1e-6))
+        rel = jnp.abs(measured - ref) / jnp.maximum(jnp.abs(ref), 1e-6)
+        worst = max(worst, float(jnp.max(rel)))
+    return worst

@@ -17,6 +17,12 @@ Models the photonic MVM path end-to-end:
 
 Everything here is pure jnp and doubles as the oracle for the
 ``kernels/photonic_mvm`` Pallas kernel.
+
+The per-write noise knob here (``PhotonicConfig.write_noise_sigma``, item 5)
+predates the serving-path fault model: ``core/noise.py`` is its successor on
+the kernel path — deterministic per-bank/tile PRNG streams, write-age drift
+tied to the residency access log, and a calibration read-back loop
+(``serve/calibration.py``) that detects and repairs the drift it injects.
 """
 from __future__ import annotations
 

@@ -22,6 +22,19 @@ an O(params) per-token tax the hardware pays once per calibration interval.
                 programming to verify the write; here it is the bank
                 checksum that ``verify_bank`` (and the conformance tests)
                 recompute against.
+  * ``w0_rowsum_t`` f32 (..., K) — the same read-back checksum for the
+                transposed orientation: per output channel of the ``wq_t``
+                image, ``sum_n W't[k, n]``.  Without it, corruption in the
+                ``_t`` tiles was invisible to ``verify_bank`` (which only
+                recomputed the W0 orientation); the calibration read-back
+                loop (``core/noise.py``) re-measures both.
+
+Each prepared leaf also carries a static ``tag`` — a stable 31-bit hash of
+its pytree path, the bank's identity for the fault model (``core/noise.py``
+keys per-bank PRNG streams on it) and the calibration loop (mapping
+residency-manager bank keys to per-bank drift ages).  It rides the pytree
+``aux_data``, so it is part of the treedef, survives jit, and never becomes
+a traced value.
 
 The quantization helpers below are the *single source of truth*: the
 in-kernel path (`kernels/ops.py`) calls the same functions, so a bank
@@ -101,6 +114,16 @@ def w0_column_sums(wq: jax.Array, qmax: float = QMAX) -> jax.Array:
     return s / (2.0 * qmax) + 0.5 * k
 
 
+def w0_row_sums(wq_t: jax.Array, qmax: float = QMAX) -> jax.Array:
+    """Read-back checksum of the TRANSPOSED orientation: per output channel
+    of the ``wq_t`` image (axis -2 there), ``sum_n W't[k, n]`` in the same
+    MRR transmission domain.  The reduction runs over axis -1 — the
+    reduction axis of the transposed use."""
+    n = wq_t.shape[-1]
+    s = jnp.sum(wq_t.astype(jnp.float32), axis=-1)
+    return s / (2.0 * qmax) + 0.5 * n
+
+
 # =========================================================================
 # PreparedTensor
 # =========================================================================
@@ -121,15 +144,20 @@ class PreparedTensor:
     wq_t: jax.Array          # int8 (..., K, N), per-row quantized
     scale_t: jax.Array       # f32  (..., K)
     w0_colsum: jax.Array     # f32  (..., N) — programmed-bank checksum
+    w0_rowsum_t: jax.Array   # f32  (..., K) — transposed-orientation checksum
+    tag: int = 0             # static bank identity (pytree aux_data)
 
     # ---------------------------------------------------------- pytree
     def tree_flatten(self):
+        # ``tag`` is aux_data: part of the treedef, never traced — two banks
+        # with different tags are different pytree *structures*, which is
+        # exactly what keys the per-bank noise streams into the jit cache.
         return ((self.wq, self.scale, self.wq_t, self.scale_t,
-                 self.w0_colsum), None)
+                 self.w0_colsum, self.w0_rowsum_t), self.tag)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, tag=aux if aux is not None else 0)
 
     # ------------------------------------------------------- array-likeness
     @property
@@ -146,12 +174,16 @@ class PreparedTensor:
         return self
 
     def __getitem__(self, idx):
+        # slices of a stacked bank share its identity: the tag names the
+        # programmed *leaf*, not an individual matrix slice
         return PreparedTensor(self.wq[idx], self.scale[idx], self.wq_t[idx],
-                              self.scale_t[idx], self.w0_colsum[idx])
+                              self.scale_t[idx], self.w0_colsum[idx],
+                              self.w0_rowsum_t[idx], tag=self.tag)
 
     # ------------------------------------------------------------- sharding
     @classmethod
-    def field_specs(cls, wspec: tuple, ndim: int) -> "PreparedTensor":
+    def field_specs(cls, wspec: tuple, ndim: int,
+                    tag: int = 0) -> "PreparedTensor":
         """Per-field PartitionSpecs from the owning weight's spec.
 
         ``wspec`` is the fp weight's (possibly trailing-trimmed) spec
@@ -159,38 +191,47 @@ class PreparedTensor:
         weight they image (``wq_t`` has the SAME array shape — the
         transposed use is an in-register swap, never a materialized
         transpose); the per-column gains/checksum (shape ``[..., N]``)
-        follow the last dim's axis and the per-row gains (``[..., K]``)
-        the second-to-last's.  Used by ``sharding.partition.
+        follow the last dim's axis and the per-row gains/checksum
+        (``[..., K]``) the second-to-last's.  Used by ``sharding.partition.
         bank_shardings`` so a bank placed on a mesh keeps every field of
-        one programmed tile on the device that owns it."""
+        one programmed tile on the device that owns it.  ``tag`` must be
+        the bank leaf's own tag: the spec node's treedef (aux_data) has to
+        match the leaf's for ``jax.device_put(bank, shardings)``."""
         from jax.sharding import PartitionSpec as P
 
         entries = list(wspec) + [None] * (ndim - len(wspec))
         lead, kax, nax = entries[:-2], entries[-2], entries[-1]
         wfull = P(*entries)
         return cls(wq=wfull, scale=P(*lead, nax), wq_t=wfull,
-                   scale_t=P(*lead, kax), w0_colsum=P(*lead, nax))
+                   scale_t=P(*lead, kax), w0_colsum=P(*lead, nax),
+                   w0_rowsum_t=P(*lead, kax), tag=tag)
 
 
 def is_prepared(w: Any) -> bool:
     return isinstance(w, PreparedTensor)
 
 
-def prepare_tensor(w: jax.Array, qmax: float = QMAX) -> PreparedTensor:
+def prepare_tensor(w: jax.Array, qmax: float = QMAX,
+                   tag: int = 0) -> PreparedTensor:
     """Program one fp weight (..., K, N) into a PreparedTensor — both
-    orientations plus the W0-row checksum."""
+    orientations plus their read-back checksums."""
     wq, scale = quantize_weight(w, qmax)
     wq_t, scale_t = quantize_weight_t(w, qmax)
     return PreparedTensor(wq=wq, scale=scale, wq_t=wq_t, scale_t=scale_t,
-                          w0_colsum=w0_column_sums(wq, qmax))
+                          w0_colsum=w0_column_sums(wq, qmax),
+                          w0_rowsum_t=w0_row_sums(wq_t, qmax), tag=tag)
 
 
 def verify_bank(prep: PreparedTensor, qmax: float = QMAX) -> jax.Array:
-    """Max |recomputed − stored| W0-row checksum error of a programmed bank
-    (the hardware read-back verification; ~0 for an uncorrupted bank, up to
-    fp32 reduction-order noise ~1e-5; a corrupted int8 tile shifts a column
-    sum by >= 1/(2*qmax) ~ 4e-3)."""
-    return jnp.max(jnp.abs(w0_column_sums(prep.wq, qmax) - prep.w0_colsum))
+    """Max |recomputed − stored| checksum error of a programmed bank over
+    BOTH orientations (the hardware read-back verification; ~0 for an
+    uncorrupted bank, up to fp32 reduction-order noise ~1e-5; a corrupted
+    int8 tile — in either the W0 or the transposed image — shifts a sum by
+    >= 1/(2*qmax) ~ 4e-3)."""
+    err = jnp.max(jnp.abs(w0_column_sums(prep.wq, qmax) - prep.w0_colsum))
+    err_t = jnp.max(jnp.abs(w0_row_sums(prep.wq_t, qmax)
+                            - prep.w0_rowsum_t))
+    return jnp.maximum(err, err_t)
 
 
 # =========================================================================
@@ -210,6 +251,15 @@ def _eligible(path, leaf) -> bool:
     return last in MATMUL_LEAVES
 
 
+def path_tag(path) -> int:
+    """Stable 31-bit bank identity from a pytree path (crc32 of the
+    ``keystr`` form).  Static python at trace time, deterministic across
+    processes — two Programs built from the same config give every bank the
+    same tag, so noise patterns and calibration state are reproducible."""
+    import zlib
+    return zlib.crc32(jax.tree_util.keystr(path).encode()) & 0x7FFFFFFF
+
+
 def prepare_params(params: Any, compute_dtype, photonic: bool) -> Any:
     """Build the prepared bank for a whole model.
 
@@ -227,7 +277,7 @@ def prepare_params(params: Any, compute_dtype, photonic: bool) -> Any:
         if hasattr(leaf, "dtype") and leaf.dtype == jnp.float32:
             leaf = leaf.astype(dtype)
         if photonic and _eligible(path, leaf):
-            return prepare_tensor(leaf)
+            return prepare_tensor(leaf, tag=path_tag(path))
         return leaf
 
     return jax.tree_util.tree_map_with_path(one, params)
@@ -260,7 +310,8 @@ def bank_descriptors(bank: Any, prefix: str = "") -> list[dict]:
             stacked *= int(d)
         out.append({"path": prefix + jax.tree_util.keystr(path),
                     "rows": k, "cols": n, "stacked": stacked,
-                    "mrr_tiles_128": stacked * tiles_128(k, n)})
+                    "mrr_tiles_128": stacked * tiles_128(k, n),
+                    "tag": leaf.tag})
     return out
 
 
@@ -280,7 +331,7 @@ def prepared_stats(bank: Any) -> dict:
         if isinstance(leaf, PreparedTensor):
             n_prog += 1
             int8_bytes += leaf.wq.size + leaf.wq_t.size
-            checksums += leaf.w0_colsum.size
+            checksums += leaf.w0_colsum.size + leaf.w0_rowsum_t.size
             k, n = leaf.wq.shape[-2], leaf.wq.shape[-1]
             stacked = 1
             for d in leaf.wq.shape[:-2]:

@@ -165,6 +165,27 @@ def photonic_matmul_fused(x, wq, wscale, *, transpose=False, bias=None,
     return y.reshape(*lead, n_out)
 
 
+def photonic_matmul_noisy(x, wq, wscale, *, noise, bank_tag=None,
+                          transpose=False, bm=128, bk=128, bn=128,
+                          qmax=127.0, x_scale=None):
+    """Split MVM + fault model: the hardware-honest photonic matmul.
+
+    Runs the bit-exact prepared MVM kernel, then applies the
+    ``core/noise.py`` perturbation (per-tile gain error, write-age drift,
+    crosstalk, DAC/TIA noise) to the RAW MVM output — after the offset
+    recompose and TIA rescale, before the electronic blend epilogue, which
+    is where those error sources physically enter the signal chain.  The
+    Pallas kernels themselves stay bit-exact (the fault-model boundary; see
+    ``kernels/photonic_mvm.py``), so the clean paths keep their bit-identity
+    gates and the noise model stays backend-portable (plain jnp, no kernel
+    variant per error source)."""
+    from repro.core import noise as noise_lib
+    mm = photonic_matmul_prepared_t if transpose else photonic_matmul_prepared
+    y = mm(x, wq, wscale, bm=bm, bk=bk, bn=bn, qmax=qmax, x_scale=x_scale)
+    return noise_lib.perturb_mvm_output(y, noise, tag=bank_tag,
+                                        transpose=transpose)
+
+
 def blend_shuffle(x, bias, block_perm, *, block=128, activation="relu"):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])

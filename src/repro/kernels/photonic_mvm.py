@@ -34,6 +34,14 @@ Tile sizes come from :func:`tile_plan` (shape-adaptive: decode-width row
 counts round to 8, reduction/column tiles grow to cover small d_model in one
 grid step) rather than hard-coded 128s.
 
+**Fault-model boundary** (DESIGN.md §Noise & calibration): these kernels are
+and stay BIT-EXACT — the ideal crossbar.  The hardware-honest error sources
+(per-tile gain error, write-age drift, crosstalk, DAC/TIA noise) live in
+``core/noise.py`` and perturb the *raw MVM output* — after the offset
+recompose and TIA rescale, before the electronic blend epilogue — via
+``kernels/ops.photonic_matmul_noisy``.  No kernel variant per error source,
+and the clean paths keep their bit-identity gates.
+
 **SPMD contract** (DESIGN.md §Sharded execution): every kernel here is
 rank-LOCAL — it sees one shard's operands and knows nothing about the mesh.
 XLA cannot auto-partition a ``pallas_call``, so on a >1-device mesh

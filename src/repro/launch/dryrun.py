@@ -157,7 +157,7 @@ def _metrics_block() -> dict:
 def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
                mesh_shape=None, compile_=True, extra_tag="",
                legacy_decode=False, act_mode="replicated",
-               fp32_accum=False, execution="xla"):
+               fp32_accum=False, execution="xla", noise=None):
     from repro.core import obu
     obu.set_matmul_accum_fp32(fp32_accum)
     cfg = get_arch(arch, reuse=reuse)
@@ -176,10 +176,30 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
         # define no VJP — the photonic backend is inference-only
         result["status"] = "SKIP(photonic: inference-only backend)"
         return result
+    # photonic fault model: lower the inference cells against a noisy
+    # Backend (core/noise.py) — proves the noisy dispatch path compiles
+    exec_backend = None
+    if noise is not None:
+        if execution != "photonic":
+            result["status"] = "SKIP(--noise needs --execution photonic)"
+            return result
+        from repro.core.backend import Backend
+        from repro.core.noise import NoiseConfig
+        ncfg = (NoiseConfig.parse(noise) if isinstance(noise, str)
+                else noise)
+        exec_backend = Backend("photonic", noise=ncfg)
+        result["noise"] = repr(ncfg)
     if mesh_shape is not None:
         mesh = mesh_lib.parse_mesh(mesh_shape)
     else:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    if exec_backend is not None and int(np.prod(
+            list(mesh.shape.values()))) > 1:
+        # NoiseConfig injection is single-device only (Backend.__post_init__
+        # enforces the same on a mesh-carrying Backend)
+        result["status"] = "SKIP(--noise is single-device; use " \
+                           "--mesh-shape 1x1)"
+        return result
     chips = int(np.prod(list(mesh.shape.values())))
     result["mesh"] = dict(mesh.shape)
 
@@ -236,7 +256,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
                                                 shape.seq_len)
             # the Program API's functional prefill (the same step
             # ``Program.prefill`` jits), lowered here with shardings
-            fn = api.prefill_step_fn(cfg, shape.seq_len, act_pspec=apspec)
+            fn = api.prefill_step_fn(cfg, shape.seq_len, act_pspec=apspec,
+                                     execution=exec_backend)
             jitted = jax.jit(fn,
                              in_shardings=(bf16_shard, bsh),
                              out_shardings=(None, c_shard))
@@ -250,7 +271,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod=False, reuse=False,
                                                 shape.global_batch,
                                                 shape.seq_len)
             fn = api.decode_step_fn(cfg, act_pspec=None,
-                                    legacy_decode=legacy_decode)
+                                    legacy_decode=legacy_decode,
+                                    execution=exec_backend)
             jitted = jax.jit(
                 fn,
                 in_shardings=(p_shard, bsh, c_shard,
@@ -375,6 +397,11 @@ def main(argv=None):
                     choices=["xla", "photonic"],
                     help="matmul substrate: XLA dot_generals or the Pallas "
                          "W8A8 photonic kernels (inference shapes only)")
+    ap.add_argument("--noise", default=None,
+                    help="photonic fault model spec (core/noise.py), e.g. "
+                         "'gain=0.01,drift=0.05,age=1e6' — lowers the "
+                         "noisy dispatch path; photonic + --mesh-shape 1x1 "
+                         "only")
     args = ap.parse_args(argv)
     mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
                   if args.mesh_shape else None)
@@ -389,7 +416,7 @@ def main(argv=None):
                            legacy_decode=args.decode_legacy,
                            act_mode=args.act_mode,
                            fp32_accum=args.fp32_accum,
-                           execution=args.execution)
+                           execution=args.execution, noise=args.noise)
         except Exception as e:
             r = {"arch": arch, "shape": shape, "status": "FAIL",
                  "error": str(e)[:500]}

@@ -96,6 +96,20 @@ def main(argv=None):
                          " vs streamed (reprogram-per-pass) sets under the "
                          "budget.  0 = off (all banks statically resident, "
                          "the legacy accounting)")
+    ap.add_argument("--noise", default=None,
+                    help="photonic fault model (core/noise.py), e.g. "
+                         "'gain=0.01,ct=0.002,dac=0.25,drift=0.05': per-tile"
+                         " gain error, crosstalk, DAC noise, write-age "
+                         "drift.  Single-device photonic only; default off "
+                         "(bit-identical clean path)")
+    ap.add_argument("--calibrate-every", type=int, default=0,
+                    help="decode steps between calibration read-back sweeps"
+                         " (serve/calibration.py): stale resident banks are"
+                         " re-programmed and billed as calibration writes. "
+                         "0 = no calibration loop.  Needs --noise")
+    ap.add_argument("--stale-threshold", type=float, default=0.01,
+                    help="read-back gain error above which a bank is "
+                         "re-programmed by the calibration loop")
     ap.add_argument("--stats", action="store_true",
                     help="enable telemetry: periodic stats line (TTFT/TPOT "
                          "p50/p95, slot occupancy, reuse ratio, write "
@@ -115,13 +129,29 @@ def main(argv=None):
         mesh = mesh_lib.make_mesh_auto()
     elif args.mesh:
         mesh = mesh_lib.parse_mesh(args.mesh)
+    if args.calibrate_every and not args.noise:
+        raise SystemExit("--calibrate-every needs --noise (nothing drifts "
+                         "on the clean path)")
+    execution = args.execution
+    noise_cfg = None
+    if args.noise:
+        from repro.core import backend as backend_lib
+        from repro.core.noise import NoiseConfig
+        noise_cfg = NoiseConfig.parse(args.noise)
+        exec_name = args.execution or cfg.execution
+        if exec_name != "photonic":
+            raise SystemExit("--noise models the photonic substrate; pass "
+                             "--execution photonic")
+        # Backend.__post_init__ rejects noise + multi-device mesh
+        execution = backend_lib.Backend("photonic", noise=noise_cfg)
+        print(f"[serve] photonic fault model on: {noise_cfg}")
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
     # compile once: backend + (photonic) prepared weight banks + mesh —
     # surfacing any partition rules that were dropped (replicated) so
     # misdivided dims are visible in the serving log
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        prog = Program.build(cfg, params, execution=args.execution,
+        prog = Program.build(cfg, params, execution=execution,
                              mesh=mesh)
     for w in caught:
         print(f"[serve] WARNING {w.message}")
@@ -167,6 +197,34 @@ def main(argv=None):
                   "continuous scheduler; ignoring")
             residency = None
 
+    # calibration read-back loop: drift detection & repair over the
+    # resident banks (serve/calibration.py; needs --noise for a drift
+    # source and the continuous scheduler for the step hook)
+    calibration = None
+    if args.calibrate_every and args.scheduler == "continuous":
+        from repro import resident
+        from repro.serve.calibration import CalibrationLoop
+        if residency is None:
+            # the loop verifies RESIDENT banks — with no --array-budget,
+            # bind the Program's banks to an unbounded manager (everything
+            # statically resident, the legacy accounting)
+            specs = resident.specs_from_program(prog)
+            manager = resident.BankResidencyManager(
+                10 ** 9, registry=obs.registry if obs else None)
+            residency = resident.ProgramResidency(manager, specs)
+        calibration = CalibrationLoop(
+            prog, residency.manager, noise=noise_cfg,
+            every_steps=args.calibrate_every,
+            stale_threshold=args.stale_threshold,
+            meter=obs.meter if obs else None,
+            registry=obs.registry if obs else None)
+        print(f"[serve] calibration loop: sweep every "
+              f"{args.calibrate_every} steps, stale threshold "
+              f"{args.stale_threshold}")
+    elif args.calibrate_every:
+        print("[serve] WARNING --calibrate-every only drives the "
+              "continuous scheduler; ignoring")
+
     if args.scheduler == "engine":
         prompt = jax.random.randint(jax.random.PRNGKey(1),
                                     (args.capacity, args.max_prompt), 1,
@@ -202,7 +260,7 @@ def main(argv=None):
             prog, capacity=capacity,
             max_len=args.max_prompt + args.new_tokens,
             temperature=args.temperature, telemetry=obs,
-            residency=residency)
+            residency=residency, calibration=calibration)
     for r in reqs:
         sched.submit(r)
     t0 = time.time()
@@ -247,6 +305,12 @@ def main(argv=None):
                       f"{rr['used_tiles']}/{rr['budget_tiles']} tiles "
                       f"({rr['occupancy_frac']:.0%}), endurance gain "
                       f"{rr['endurance']['endurance_gain']:.1f}x")
+            if calibration is not None:
+                cr = calibration.report()
+                print(f"  calibration: {cr['sweeps']} sweeps, "
+                      f"{cr['rechecks']} rechecks, {cr['reprograms']} "
+                      f"reprograms, last sweep {cr['stale_banks']} stale / "
+                      f"max read-back err {cr['max_readback_err']:.4f}")
         if args.trace_out:
             obs.tracer.save(args.trace_out)
             print(f"[serve] Chrome trace -> {args.trace_out} "

@@ -113,6 +113,9 @@ class PhotonicMeter:
         self.resident_misses = 0
         self.evictions = 0
         self.external_bank_writes = 0
+        self.calibration_writes = 0   # drift-repair reprograms (a subset of
+                                      # external_bank_writes — never billed
+                                      # a second time)
         self._steps_since_refresh = 0
         self._programmed = False
         # with external_writes=True the meter's OWN programming schedule
@@ -147,6 +150,17 @@ class PhotonicMeter:
         self.external_bank_writes += n
         self.registry.counter("energy.external_bank_writes").inc(n)
         self.record_bank_write(n)
+
+    def record_calibration_write(self, n: int = 1) -> None:
+        """A calibration-loop drift repair: re-programming a stale resident
+        bank in place (``serve/calibration.py``).  Tagged separately so the
+        report can say how much of the write budget maintenance costs, but
+        PRICED through the one external-write chain — each matrix lands in
+        ``bank_writes`` exactly once (the no-double-billing contract
+        tests/test_residency.py extends to calibration)."""
+        self.calibration_writes += n
+        self.registry.counter("energy.calibration_bank_writes").inc(n)
+        self.record_external_bank_write(n)
 
     def record_resident_access(self, hit: bool, n: int = 1) -> None:
         """One residency-cache lookup: a hit is a free pass (the bank was
@@ -244,6 +258,15 @@ class PhotonicMeter:
             # residency-manager feed (zeros when residency is off)
             "resident_hit_rate": self.resident_hit_rate,
             "evictions": self.evictions,
+            # calibration-loop feed (zeros when no calibration runs):
+            # maintenance's share of the write ledger, in matrices / uJ /
+            # fraction-of-all-writes (the measured input costmodel.
+            # energy_breakdown prefers over its static 0.5 split)
+            "calibration_writes": self.calibration_writes,
+            "calibration_write_energy_uJ": self.calibration_writes * self._we,
+            "calibration_fraction": (self.calibration_writes
+                                     / self.bank_writes
+                                     if self.bank_writes else 0.0),
         }
         g = self.registry.gauge
         g("energy.reuse_ratio").set(rep["reuse_ratio"])

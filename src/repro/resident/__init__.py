@@ -16,7 +16,7 @@ scheduling subsystem.
 stay importable without this package.
 """
 from repro.resident.manager import (  # noqa: F401
-    Access, BankResidencyManager, BankSpec, ProgramResidency,
+    Access, BankResidencyManager, BankSpec, DriftClock, ProgramResidency,
     specs_from_profile, specs_from_program,
 )
 from repro.resident.mapping import (  # noqa: F401

@@ -80,6 +80,8 @@ class _BankStats:
     ewma_interval: float = 0.0     # 0 = seen at most once
     accesses: int = 0
     writes: int = 0                # matrices programmed over this bank's life
+    last_write_access: int = 0     # accesses count at the last programming
+                                   # (the DriftClock's age anchor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +109,7 @@ class BankResidencyManager:
     def __init__(self, budget_tiles: int, *,
                  ewma_alpha: float = 0.25,
                  endurance_weight: float = 1e3,
+                 drift_weight: float = 0.0,
                  model: costmodel.CalibratedCost = costmodel.CALIBRATED,
                  aging_cfg: aging.AgingConfig = aging.AgingConfig(),
                  registry=None):
@@ -114,9 +117,12 @@ class BankResidencyManager:
             raise ValueError(f"budget_tiles must be >= 0, got {budget_tiles}")
         if not (0.0 < ewma_alpha <= 1.0):
             raise ValueError(f"ewma_alpha must be in (0, 1], got {ewma_alpha}")
+        if drift_weight < 0:
+            raise ValueError(f"drift_weight must be >= 0, got {drift_weight}")
         self.budget_tiles = int(budget_tiles)
         self.ewma_alpha = float(ewma_alpha)
         self.endurance_weight = float(endurance_weight)
+        self.drift_weight = float(drift_weight)
         self.model = model
         self.aging_cfg = aging_cfg
         self.registry = registry
@@ -130,6 +136,7 @@ class BankResidencyManager:
         self.evictions = 0
         self.writes_mats = 0          # matrices programmed (installs)
         self.streamed_writes_mats = 0  # unresidentable banks, per access
+        self.calibration_writes_mats = 0  # calibration-loop reprograms
         self.eviction_log: list[str] = []
 
     # ------------------------------------------------------------ predictor
@@ -174,12 +181,24 @@ class BankResidencyManager:
 
     def retention_score(self, key: str) -> float:
         """Expected per-tile value of keeping ``key`` resident (higher =
-        keep).  See the module docstring for the formula."""
+        keep).  See the module docstring for the formula.
+
+        With ``drift_weight > 0`` the score learns a drift penalty:
+        ``drift_weight * expected_drift_nm(writes) / tolerance_nm`` — a
+        heavily written (drift-stressed) bank is a worse tenant because the
+        calibration loop will soon have to reprogram it anyway, so keeping
+        it resident buys fewer free passes than its access rate suggests.
+        The default ``drift_weight=0.0`` leaves every existing eviction
+        trace bit-identical."""
         st = self.known[key]
         value = self._rate(st) * (self._write_energy(st.spec)
                                   + self.endurance_weight
                                   * self._endurance_delta_w(st))
-        return value / max(st.spec.tiles, 1)
+        score = value / max(st.spec.tiles, 1)
+        if self.drift_weight > 0:
+            score -= self.drift_weight * aging.expected_drift_nm(
+                float(st.writes), self.aging_cfg) / self.aging_cfg.tolerance_nm
+        return score
 
     # ------------------------------------------------------------- eviction
     def _evict_for(self, need_tiles: int) -> list[str]:
@@ -222,6 +241,7 @@ class BankResidencyManager:
         if spec.tiles > self.budget_tiles:
             # unresidentable: stream it — a reprogram per access
             st.writes += spec.mats
+            st.last_write_access = st.accesses
             self.streamed_writes_mats += spec.mats
             return Access(hit=False, resident=False, writes=spec.mats,
                           evicted=())
@@ -229,11 +249,28 @@ class BankResidencyManager:
         self.resident[spec.key] = spec
         self.used_tiles += spec.tiles
         st.writes += spec.mats
+        st.last_write_access = st.accesses
         self.writes_mats += spec.mats
         if self.registry is not None:
             self.registry.counter("residency.install_writes").inc(spec.mats)
         return Access(hit=False, resident=True, writes=spec.mats,
                       evicted=tuple(evicted))
+
+    def record_calibration(self, spec: BankSpec) -> None:
+        """An in-place calibration reprogram of ``spec`` (the bank stays
+        resident; no eviction, no clock tick — this is maintenance, not a
+        serving access).  The reprogram still stresses the heaters, so the
+        bank's lifetime write count — the drift-penalty input — advances by
+        ``spec.mats``.  Billing is the CALLER's job (the calibration loop
+        prices it through ``PhotonicMeter.record_calibration_write``); the
+        manager only keeps the age ledger honest."""
+        st = self._stats(spec)
+        st.writes += spec.mats
+        st.last_write_access = st.accesses
+        self.calibration_writes_mats += spec.mats
+        if self.registry is not None:
+            self.registry.counter(
+                "residency.calibration_writes").inc(spec.mats)
 
     # ------------------------------------------------------------- queries
     def is_resident(self, key: str) -> bool:
@@ -249,8 +286,10 @@ class BankResidencyManager:
 
     @property
     def total_writes_mats(self) -> int:
-        """All programmings paid: installs + streamed reprograms."""
-        return self.writes_mats + self.streamed_writes_mats
+        """All programmings paid: installs + streamed reprograms +
+        calibration reprograms (zero unless a calibration loop runs)."""
+        return (self.writes_mats + self.streamed_writes_mats
+                + self.calibration_writes_mats)
 
     # ------------------------------------------------------------- reports
     def endurance_report(self) -> dict:
@@ -286,6 +325,7 @@ class BankResidencyManager:
             "evictions": self.evictions,
             "install_writes_mats": self.writes_mats,
             "streamed_writes_mats": self.streamed_writes_mats,
+            "calibration_writes_mats": self.calibration_writes_mats,
             "endurance": self.endurance_report(),
         }
         if self.registry is not None:
@@ -298,6 +338,58 @@ class BankResidencyManager:
             g("residency.endurance_gain").set(
                 rep["endurance"]["endurance_gain"])
         return rep
+
+
+# =========================================================================
+# drift clock
+# =========================================================================
+class DriftClock:
+    """Per-bank write-age clock over a manager's access log — the source
+    feeding ``core/noise.py``'s drift model and the calibration loop.
+
+    Every serving access of a bank holds its rings under thermal bias for
+    one pass; ``writes_per_access`` converts that logged access count into
+    equivalent write-stress cycles (the unit ``core/aging.py`` prices).
+    ``age_writes(key)`` is the stress accumulated SINCE the bank was last
+    (re)programmed: ``reset(key)`` — called by the calibration loop after a
+    reprogram — re-anchors the baseline at the bank's current access count,
+    so age is always "accesses since last program", not lifetime total
+    (lifetime stays in ``_BankStats.writes`` for the eviction penalty).
+
+    The anchor is ``_BankStats.last_write_access`` — the manager stamps it
+    on every programming event (install after a miss/eviction, streamed
+    reprogram, calibration repair), so age is exact from the bank's very
+    first sweep.  Purely a view over the manager's deterministic counters:
+    no wall time, no state of its own, so a fixed access trace yields
+    bit-reproducible ages."""
+
+    def __init__(self, manager: BankResidencyManager, *,
+                 writes_per_access: float = 1.0):
+        if writes_per_access < 0:
+            raise ValueError(f"writes_per_access must be >= 0, got "
+                             f"{writes_per_access}")
+        self.manager = manager
+        self.writes_per_access = float(writes_per_access)
+
+    def age_writes(self, key: str) -> float:
+        """Write-stress cycles accumulated since ``key`` was last
+        programmed (0.0 for a bank the manager has never seen)."""
+        st = self.manager.known.get(key)
+        if st is None:
+            return 0.0
+        return max(st.accesses - st.last_write_access, 0) \
+            * self.writes_per_access
+
+    def reset(self, key: str) -> None:
+        """Re-anchor ``key``'s age at zero (just reprogrammed).  Usually
+        implicit — every manager write path stamps the anchor itself —
+        kept for callers driving reprograms outside the manager."""
+        st = self.manager.known.get(key)
+        if st is not None:
+            st.last_write_access = st.accesses
+
+    def ages(self, keys: Sequence[str]) -> dict:
+        return {k: self.age_writes(k) for k in keys}
 
 
 # =========================================================================

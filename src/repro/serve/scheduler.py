@@ -141,7 +141,8 @@ class ContinuousScheduler:
                  on_token: Optional[Callable[[int, int], None]] = None,
                  on_complete: Optional[Callable[[Completion], None]] = None,
                  telemetry=None,
-                 residency=None):
+                 residency=None,
+                 calibration=None):
         # compile-once entry: pass a prebuilt ``api.Program`` as the first
         # argument (backend + prepared banks resolved exactly once, shared
         # with other schedulers); or the legacy (params, cfg) pair, which
@@ -174,6 +175,12 @@ class ContinuousScheduler:
         # evictions are priced writes.  Purely an accounting/policy layer:
         # served tokens are identical with it on or off.
         self.residency = residency
+        # drift detection & repair (serve/calibration.py): an optional
+        # CalibrationLoop whose on_step hook runs after the residency hook
+        # each decode step — read-back happens at the ages THIS step's
+        # accesses produced, mirroring hardware where verification follows
+        # the compute it verifies
+        self.calibration = calibration
         if admission is None and residency is not None:
             from repro.resident.cosched import ResidencyAwareAdmission
             admission = ResidencyAwareAdmission.from_base(
@@ -341,6 +348,8 @@ class ContinuousScheduler:
             self.obs.meter.on_decode_step(self.pool.capacity)
         if self.residency is not None:
             self.residency.on_decode_step(self.pool.capacity)
+        if self.calibration is not None:
+            self.calibration.on_step()
         tr = self.obs.tracer if self.obs else None
         with (tr.span("decode_step", active=len(active),
                       capacity=self.pool.capacity)

@@ -147,7 +147,10 @@ def bank_shardings(bank: Any, specs: Any, mesh: Mesh, fsdp: bool,
         ax = tuple(ax)
         if isinstance(leaf, PreparedTensor):
             wspec = spec_for(ax, tuple(leaf.wq.shape), mesh, rules, report)
-            fields = PreparedTensor.field_specs(tuple(wspec), leaf.wq.ndim)
+            # carry the leaf's tag into the spec node: the treedef (tag is
+            # pytree aux_data) must match the bank leaf's for device_put
+            fields = PreparedTensor.field_specs(tuple(wspec), leaf.wq.ndim,
+                                                tag=leaf.tag)
             return jax.tree.map(lambda p: NamedSharding(mesh, p), fields,
                                 is_leaf=lambda x: isinstance(x, P))
         return NamedSharding(

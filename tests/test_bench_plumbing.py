@@ -20,7 +20,7 @@ import pytest
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
     __file__))))
 
-from benchmarks import backend_bench  # noqa: E402
+from benchmarks import backend_bench, drift_bench, residency_bench  # noqa: E402
 
 
 def _ladder_details():
@@ -88,3 +88,57 @@ def test_write_bench_decode_tolerates_corrupt_existing(tmp_path):
     with open(path) as f:
         rows = json.load(f)
     assert rows["fused_us"] == 25.0 and "sharded_decode" not in rows
+
+
+# =====================================================================
+# PR-9: the residency and drift writers honor the same merge contract
+# =====================================================================
+def test_write_bench_residency_preserves_unmeasured_drift_row(tmp_path):
+    path = str(tmp_path / "BENCH_residency.json")
+    drift_row = {"residency_calibrated": {
+        "energy_uJ": 10.0, "calibration_writes_mats": 7,
+        "vs_reprogram_energy_frac": 0.7}}
+    residency_bench.write_bench_residency(drift_row, path)
+    # a later non---drift run measures only the 3-policy rows
+    residency_bench.write_bench_residency(
+        {"residency": {"energy_uJ": 9.0}, "savings": {}}, path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["residency_calibrated"]["calibration_writes_mats"] == 7
+    assert rows["residency"]["energy_uJ"] == 9.0
+    # measured-in-same-run wins over the stale row
+    residency_bench.write_bench_residency(
+        {"residency_calibrated": {"calibration_writes_mats": 3}}, path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["residency_calibrated"]["calibration_writes_mats"] == 3
+    assert rows["residency"]["energy_uJ"] == 9.0
+
+
+def test_write_bench_residency_tolerates_corrupt_existing(tmp_path):
+    path = str(tmp_path / "BENCH_residency.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    residency_bench.write_bench_residency({"residency": {"x": 1}}, path)
+    with open(path) as f:
+        assert json.load(f) == {"residency": {"x": 1}}
+
+
+def test_write_bench_drift_merge_preserves_foreign_keys(tmp_path):
+    path = str(tmp_path / "BENCH_drift.json")
+    drift_bench.write_bench_drift({"drift_sweep": [{"age_writes": 0.0}],
+                                   "calibration": {"reprograms": 4}}, path)
+    drift_bench.write_bench_drift({"config": {"rungs": 5}}, path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["calibration"]["reprograms"] == 4
+    assert rows["config"]["rungs"] == 5
+
+
+def test_write_bench_drift_tolerates_corrupt_existing(tmp_path):
+    path = str(tmp_path / "BENCH_drift.json")
+    with open(path, "w") as f:
+        f.write("[truncated")
+    drift_bench.write_bench_drift({"config": {"rungs": 3}}, path)
+    with open(path) as f:
+        assert json.load(f) == {"config": {"rungs": 3}}

@@ -1,0 +1,338 @@
+"""PR-9 fault model + calibration loop: noise properties (bit-identity,
+drift monotonicity, seed determinism, xla no-op), transpose-orientation
+checksum corruption, the calibration read-back loop end to end, and the
+measured calibration fraction in the energy breakdown."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.configs.base import ModelConfig
+from repro.core import noise as noise_lib
+from repro.core import prepared as prepared_lib
+from repro.core.backend import Backend
+from repro.core.noise import NoiseConfig
+from repro.models import transformer as tfm
+from tests._optional_hypothesis import given, settings, st
+
+Program = api.Program
+
+
+def _rel_l2(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+def small_cfg(**kw):
+    return ModelConfig(name="noise-t", family="dense", num_layers=2,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=128, compute_dtype="float32", **kw)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = small_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prefill_logits(cfg, params, execution, T=8):
+    prog = Program.build(cfg, params, execution=execution)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, T), 1,
+                              cfg.vocab_size).astype(jnp.int32)
+    logits, caches = prog.prefill({"tokens": toks}, T + 2)
+    step, caches = prog.decode_sample(toks[:, :1], caches, T)
+    return np.asarray(logits), np.asarray(step)
+
+
+# =====================================================================
+# NoiseConfig basics
+# =====================================================================
+def test_default_config_disabled_and_hashable():
+    cfg = NoiseConfig()
+    assert not cfg.enabled
+    hash(cfg)                                    # static jit-cell key
+    assert NoiseConfig(gain_sigma=0.01).enabled
+    assert NoiseConfig(crosstalk=0.01).enabled
+    assert NoiseConfig(dac_sigma=0.1).enabled
+    # drift needs BOTH a gain slope and a nonzero age to perturb
+    assert not NoiseConfig(drift_gain_per_nm=0.05).enabled
+    assert NoiseConfig(drift_gain_per_nm=0.05, age_writes=1e6).enabled
+    assert NoiseConfig(drift_gain_per_nm=0.05,
+                       bank_ages=((7, 1e6),)).enabled
+    with pytest.raises(ValueError):
+        NoiseConfig(gain_sigma=-0.1)
+
+
+def test_parse_round_trip_and_aliases():
+    cfg = NoiseConfig.parse("gain=0.01,ct=0.002,dac=0.25,drift=0.1,"
+                            "age=1e6,seed=3")
+    assert cfg.gain_sigma == 0.01 and cfg.crosstalk == 0.002
+    assert cfg.dac_sigma == 0.25 and cfg.drift_gain_per_nm == 0.1
+    assert cfg.age_writes == 1e6 and cfg.seed == 3
+    assert NoiseConfig.parse("xt=0.5").crosstalk == 0.5
+    with pytest.raises(ValueError, match="unknown --noise key"):
+        NoiseConfig.parse("bogus=1")
+    with pytest.raises(ValueError, match="key=value"):
+        NoiseConfig.parse("gain")
+
+
+def test_with_bank_ages_hashable_and_queried():
+    cfg = NoiseConfig(drift_gain_per_nm=0.05, age_writes=5.0)
+    aged = cfg.with_bank_ages({3: 1e6, 1: 2e5})
+    hash(aged)
+    assert aged.bank_ages == ((1, 2e5), (3, 1e6))
+    assert aged.age_for(3) == 1e6
+    assert aged.age_for(99) == 5.0               # unknown tag: global age
+    assert aged.age_for(None) == 5.0
+
+
+# =====================================================================
+# property: zero config is bit-identical (the identity contract)
+# =====================================================================
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), rows=st.integers(1, 9),
+       cols=st.integers(1, 300))
+def test_zero_config_perturbation_is_identity(seed, rows, cols):
+    y = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    out = noise_lib.perturb_mvm_output(y, NoiseConfig(), tag=seed)
+    assert out is y                              # not even a copy
+
+
+# =====================================================================
+# property: drift strictly monotone in write age
+# =====================================================================
+@settings(max_examples=20, deadline=None)
+@given(tag=st.integers(0, 2 ** 30),
+       ages=st.lists(st.floats(0.0, 1e8), min_size=2, max_size=6),
+       seed=st.integers(0, 2 ** 16))
+def test_drift_monotone_in_write_age(tag, ages, seed):
+    """For any bank and any pair of ages a1 <= a2, the realized per-channel
+    drift error at a2 dominates a1 ELEMENTWISE: the direction draw is fixed
+    per (bank, tile) and only the magnitude carries the age."""
+    cfg = NoiseConfig(drift_gain_per_nm=0.05, seed=seed)
+    errs = [np.abs(np.asarray(noise_lib.channel_gains(
+        cfg, 300, tag=tag, age_writes=a)) - 1.0) for a in sorted(ages)]
+    for lo, hi in zip(errs, errs[1:]):
+        assert (hi >= lo - 1e-12).all()
+
+
+def test_drift_monotone_elementwise_fixed_ladder():
+    """Deterministic pin of the property above (runs without hypothesis):
+    one bank, a fixed age ladder, elementwise dominance."""
+    cfg = NoiseConfig(drift_gain_per_nm=0.05, seed=0)
+    errs = [np.abs(np.asarray(noise_lib.channel_gains(
+        cfg, 300, tag=42, age_writes=a)) - 1.0)
+        for a in (0.0, 1e4, 1e5, 1e6, 1e7)]
+    assert (errs[0] == 0.0).all()
+    for lo, hi in zip(errs, errs[1:]):
+        assert (hi >= lo).all()
+        assert hi.max() > lo.max()               # strictly growing overall
+
+
+def test_drift_sigma_monotone_and_zero_at_birth():
+    cfg = NoiseConfig(drift_gain_per_nm=0.05)
+    sig = [cfg.drift_sigma(a) for a in (0.0, 1e4, 1e5, 1e6, 1e7)]
+    assert sig[0] == 0.0
+    assert all(b > a for a, b in zip(sig, sig[1:]))
+
+
+# =====================================================================
+# property: same seed => bitwise-identical perturbation
+# =====================================================================
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), tag=st.integers(0, 2 ** 30))
+def test_same_seed_bitwise_identical(seed, tag):
+    cfg = NoiseConfig(gain_sigma=0.02, crosstalk=0.003, dac_sigma=0.3,
+                      drift_gain_per_nm=0.05, age_writes=1e6, seed=seed)
+    y = jax.random.normal(jax.random.PRNGKey(seed + 7), (4, 300))
+    a = np.asarray(noise_lib.perturb_mvm_output(y, cfg, tag=tag))
+    b = np.asarray(noise_lib.perturb_mvm_output(y, cfg, tag=tag))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, np.asarray(y))  # it DID perturb
+    c = np.asarray(noise_lib.perturb_mvm_output(
+        y, dataclasses.replace(cfg, seed=seed + 1), tag=tag))
+    assert not np.array_equal(a, c)              # seed matters
+    d = np.asarray(noise_lib.perturb_mvm_output(y, cfg, tag=tag + 1))
+    assert not np.array_equal(a, d)              # bank identity matters
+
+
+def test_orientations_draw_independent_errors():
+    cfg = NoiseConfig(gain_sigma=0.05)
+    g = np.asarray(noise_lib.channel_gains(cfg, 256, tag=5))
+    gt = np.asarray(noise_lib.channel_gains(cfg, 256, tag=5,
+                                            transpose=True))
+    assert not np.array_equal(g, gt)
+
+
+# =====================================================================
+# Program-level: disabled config bit-identical, xla no-op, noisy differs
+# =====================================================================
+def test_disabled_noise_bit_identical_to_clean_photonic(small):
+    cfg, params = small
+    clean = _prefill_logits(cfg, params, "photonic")
+    wired = _prefill_logits(cfg, params,
+                            Backend("photonic", noise=NoiseConfig()))
+    np.testing.assert_array_equal(clean[0], wired[0])
+    np.testing.assert_array_equal(clean[1], wired[1])
+
+
+def test_noise_is_noop_under_xla_execution(small):
+    cfg, params = small
+    loud = NoiseConfig(gain_sigma=0.05, crosstalk=0.01, dac_sigma=0.5,
+                       drift_gain_per_nm=0.05, age_writes=1e7)
+    assert not Backend("xla", noise=loud).noise_active
+    clean = _prefill_logits(cfg, params, "xla")
+    wired = _prefill_logits(cfg, params, Backend("xla", noise=loud))
+    np.testing.assert_array_equal(clean[0], wired[0])
+    np.testing.assert_array_equal(clean[1], wired[1])
+
+
+def test_enabled_noise_perturbs_and_replays(small):
+    cfg, params = small
+    noisy_bk = Backend("photonic", noise=NoiseConfig(gain_sigma=0.02))
+    clean = _prefill_logits(cfg, params, "photonic")
+    a = _prefill_logits(cfg, params, noisy_bk)
+    b = _prefill_logits(cfg, params, noisy_bk)
+    assert not np.array_equal(clean[0], a[0])    # fault model engaged
+    assert 0.0 < _rel_l2(a[0], clean[0]) < 1.0   # bounded perturbation
+    np.testing.assert_array_equal(a[0], b[0])    # deterministic replay
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+# =====================================================================
+# satellite: transpose-orientation checksum catches _t corruption
+# =====================================================================
+def test_transpose_checksum_detects_t_tile_corruption():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    prep = prepared_lib.prepare_tensor(w)
+    assert float(prepared_lib.verify_bank(prep)) < 1e-4
+    # corrupt ONLY the transposed image: the W0-orientation checksum is
+    # blind to it, the w0_rowsum_t checksum is not
+    bad_t = dataclasses.replace(
+        prep, wq_t=prep.wq_t.at[3, 5].add(jnp.int8(17)))
+    w0_only = jnp.max(jnp.abs(
+        prepared_lib.w0_column_sums(bad_t.wq, prepared_lib.QMAX)
+        - bad_t.w0_colsum))
+    assert float(w0_only) < 1e-4                 # the pre-PR blind spot
+    assert float(prepared_lib.verify_bank(bad_t)) > 1e-3
+
+
+# =====================================================================
+# calibration loop end to end
+# =====================================================================
+def test_calibration_loop_detects_and_repairs(small):
+    from repro.obs import metrics as metrics_lib
+    from repro.obs.meter import PhotonicMeter, StackProfile
+    from repro.resident import (BankResidencyManager, DriftClock,
+                                specs_from_program)
+    from repro.serve.calibration import CalibrationLoop
+
+    cfg, params = small
+    noise0 = NoiseConfig(drift_gain_per_nm=0.05, writes_per_epoch=1e5)
+    prog = Program.build(cfg, params,
+                         execution=Backend("photonic", noise=noise0))
+    reg = metrics_lib.MetricsRegistry()
+    manager = BankResidencyManager(10 ** 9, registry=reg)
+    meter = PhotonicMeter(StackProfile.from_cfg(cfg), external_writes=True,
+                          registry=reg)
+    clock = DriftClock(manager, writes_per_access=5e5)
+    specs = specs_from_program(prog, prefix=cfg.name)
+    assert specs
+    installs = 0
+    for spec in specs:
+        acc = manager.access(spec)
+        meter.record_external_bank_write(acc.writes)
+        installs += acc.writes
+    loop = CalibrationLoop(prog, manager, clock=clock, noise=noise0,
+                           every_steps=2, stale_threshold=1e-4,
+                           meter=meter, registry=reg, prefix=cfg.name)
+    # loop keys must name exactly the banks the residency binding installed
+    assert {k for k, _, _ in loop.banks} == {s.key for s in specs}
+
+    # fresh rings: a sweep finds nothing stale, republishes zero ages
+    res = loop.run()
+    assert res["stale"] == 0 and res["max_readback_err"] == 0.0
+    assert meter.calibration_writes == 0
+
+    # age every bank by one serving touch (5e5 writes ~ 1.1nm drift),
+    # driven through the scheduler-facing hook (fires on the 2nd step)
+    for spec in specs:
+        manager.access(spec)
+    assert not loop.on_step()
+    for spec in specs:
+        manager.access(spec)
+    assert loop.on_step()
+    assert loop.reprograms == len(specs)         # all stale, all repaired
+    assert meter.calibration_writes == installs  # same mats, billed once
+    assert meter.bank_writes == installs + meter.calibration_writes
+    assert manager.report()["calibration_writes_mats"] \
+        == meter.calibration_writes
+    for key, _, _ in loop.banks:                 # clocks re-anchored
+        assert clock.age_writes(key) == 0.0
+    # repaired ages republished on the LIVE program (quantized to 0)
+    assert prog.backend.noise.bank_ages
+    assert all(a == 0.0 for _, a in prog.backend.noise.bank_ages)
+    snap = reg.snapshot()
+    assert snap["counters"]["calibration.rechecks"] == 2 * len(specs)
+    assert snap["counters"]["calibration.reprograms"] == len(specs)
+    assert snap["gauges"]["calibration.sweeps"] == 2
+    rep = loop.report()
+    assert rep["sweeps"] == 2 and rep["reprograms"] == len(specs)
+
+
+def test_calibration_loop_requires_noise(small):
+    from repro.resident import BankResidencyManager
+    from repro.serve.calibration import CalibrationLoop
+
+    cfg, params = small
+    prog = Program.build(cfg, params, execution="photonic")
+    with pytest.raises(ValueError, match="NoiseConfig"):
+        CalibrationLoop(prog, BankResidencyManager(10 ** 9))
+
+
+def test_readback_sees_drift_not_statics():
+    """The read-back compares against the post-programming reference, so
+    static fabrication gain cancels; only age-accumulated drift registers."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 40))
+    prep = prepared_lib.prepare_tensor(w, tag=11)
+    static_only = NoiseConfig(gain_sigma=0.1)
+    assert noise_lib.readback_gain_error(prep, static_only) == 0.0
+    drifty = NoiseConfig(drift_gain_per_nm=0.05)
+    fresh = noise_lib.readback_gain_error(prep, drifty, age_writes=0.0)
+    aged = noise_lib.readback_gain_error(prep, drifty, age_writes=1e6)
+    older = noise_lib.readback_gain_error(prep, drifty, age_writes=1e7)
+    assert fresh == 0.0
+    assert 0.0 < aged < older
+
+
+# =====================================================================
+# satellite: measured calibration fraction in the energy breakdown
+# =====================================================================
+def test_energy_breakdown_measured_calibration_fraction():
+    from repro.core import costmodel
+    cost = costmodel.matrix_cost(256, 256, 256, programs=10, passes=100)
+    static = costmodel.energy_breakdown(cost)
+    assert static["calibration"] == pytest.approx(
+        0.5 * cost.write_energy_uJ)              # the 0.5 prior
+    rep = {"bank_writes": 80, "calibration_writes": 20,
+           "write_delay_ns": 1.0, "compute_delay_ns": 1.0,
+           "write_energy_uJ": 1.0, "compute_energy_uJ": 1.0}
+    measured = costmodel.energy_breakdown(cost, meter_report=rep)
+    assert measured["calibration"] == pytest.approx(
+        0.25 * cost.write_energy_uJ)             # 20/80 measured
+    assert measured["programming"] == pytest.approx(
+        0.75 * cost.write_energy_uJ)
+    assert measured["total"] == static["total"]
+    # fallback ladder: no writes, or a report predating the counters
+    assert costmodel.energy_breakdown(
+        cost, meter_report={"bank_writes": 0, "calibration_writes": 0}
+    )["calibration"] == static["calibration"]
+    assert costmodel.energy_breakdown(
+        cost, meter_report={"bank_writes": 50}
+    )["calibration"] == static["calibration"]
