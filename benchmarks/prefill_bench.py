@@ -1,0 +1,404 @@
+"""Prefill/TTFT ladder: split attention -> flash -> flash+fused matmuls ->
+chunked-under-load (ISSUE 10).
+
+``python -m benchmarks.prefill_bench [--smoke] [--sharded DxM]``
+
+Decode throughput was PRs 3-8; this bench measures the OTHER serving
+latency: time-to-first-token.  One attention-dominant LM prefills a long
+prompt through three Program configurations:
+
+  * ``split``       — einsum/scan attention (``attend_seq_xla``) + split
+    MVM passes (``Backend(fused=False, flash=False)``) — the pre-ISSUE-10
+    prefill path;
+  * ``flash``       — the Pallas flash-attention kernel under the Backend
+    seam (online softmax, causal block-skip), split MVMs;
+  * ``flash_fused`` — the default photonic Backend: flash attention plus
+    the shape-adaptive fused MVM megakernel at prefill row widths.
+
+A fourth row runs the serving-level story: a ``ContinuousScheduler`` with
+``prefill_chunk`` set serves a mixed trace (long prompts + short ones), and
+the ``RequestTracker`` histograms show chunking bounding the per-step
+decode stall that a monolithic long prefill inflicts on in-flight requests
+— with greedy tokens identical to the monolithic scheduler.
+
+Acceptance (gated here): ``flash_fused`` >= 1.5x over ``split`` at
+S >= 2048; photonic flash-vs-einsum Program prefill parity rel-L2 <=
+0.055; chunked scheduler token-identical to monolithic.
+
+``--sharded DxM`` adds a data/model-parallel prefill row (mesh-built
+Program; flash hands off to the einsum path under a mesh — the sharded row
+measures partitioned fused MVMs), parity-gated against the single-device
+row.  ``--parity-only`` runs just that row and merges it into
+BENCH_prefill.json without touching the ladder keys (the CI sharded-smoke
+mode); the full ladder writer preserves an existing ``sharded_prefill``
+row symmetrically.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+SPEEDUP_GATE = 1.5       # flash_fused vs split, S >= 2048
+PARITY_TOL = 0.055       # W8A8 tolerance (tier-1 parity bound)
+
+
+def _rel_l2(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+def jax_block(tree):
+    import jax
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _time_prefill_ms(prog, batch, cache_len, reps):
+    out = prog.prefill(batch, cache_len)
+    jax_block(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = prog.prefill(batch, cache_len)
+    jax_block(out)
+    return (time.time() - t0) / reps * 1e3, out[0]
+
+
+def _bench_cfg(d_model=256):
+    from repro.configs.base import ModelConfig
+    # attention-dominant at long S: modest d_model keeps the MVMs small
+    # relative to the S^2 attention term the flash kernel attacks
+    return ModelConfig(name="prefill-bench-lm", family="dense",
+                       num_layers=2, d_model=d_model, num_heads=8,
+                       num_kv_heads=4, d_ff=2 * d_model, vocab_size=1024,
+                       compute_dtype="float32")
+
+
+def bench_prefill_ladder(S: int, reps: int, details: dict):
+    """The three timed Program rows + the parity pair, on one LM."""
+    import jax
+    from repro.api import Program
+    from repro.core.backend import Backend
+    from repro.models import transformer as tfm
+
+    cfg = _bench_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B = 1
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    cache_len = S + 16
+
+    ms = {}
+    logits = {}
+    rows = (("split", Backend("photonic", fused=False, flash=False)),
+            ("flash", Backend("photonic", fused=False)),
+            ("flash_fused", Backend("photonic")))
+    for name, bk in rows:
+        prog = Program.build(cfg, params, execution=bk)
+        ms[name], logits[name] = _time_prefill_ms(prog, batch, cache_len,
+                                                  reps)
+
+    # parity: the flash kernel vs the einsum path it replaces (same
+    # photonic matmuls — isolates the attention schedule), and the
+    # cross-backend W8A8 check vs the xla Program
+    parity_flash = _rel_l2(logits["flash"], logits["split"])
+    prog_x = Program.build(cfg, params, execution="xla")
+    xlogits, _ = prog_x.prefill(batch, cache_len)
+    parity_xla = _rel_l2(logits["flash_fused"], xlogits)
+
+    details["prefill_ladder"] = {
+        "model": {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                  "num_layers": cfg.num_layers, "B": B, "S": S},
+        "split_ms": ms["split"], "flash_ms": ms["flash"],
+        "flash_fused_ms": ms["flash_fused"],
+        "flash_speedup_vs_split": ms["split"] / ms["flash"],
+        "flash_fused_speedup_vs_split": ms["split"] / ms["flash_fused"],
+        "parity_flash_vs_einsum_rel_l2": parity_flash,
+        "parity_vs_xla_rel_l2": parity_xla}
+    return details["prefill_ladder"]
+
+
+def bench_chunked_under_load(details: dict, *, chunk: int = 256):
+    """Chunked vs monolithic continuous serving on a mixed trace.
+
+    Two identical schedulers (same Program, same greedy trace) serve two
+    long prompts plus a cohort of short ones; the short requests are
+    in-flight decoding when the long prefills land.  Monolithic: each long
+    prefill is one scheduler step, so every in-flight request stalls for
+    the full prompt.  Chunked: the prefill runs ``chunk`` tokens per step
+    interleaved with decode, so the worst inter-token gap is bounded by
+    one chunk — that is the ``tpot max`` delta reported here.  Greedy
+    tokens must be identical — asserted on the xla Program, where chunked
+    prefill is bit-exact (on photonic, per-chunk activation scales differ
+    from whole-prompt scales: logits agree only to W8A8 tolerance, so a
+    near-tie argmax can legitimately flip on kilo-token prompts)."""
+    import jax
+    from repro.api import Program
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as tfm
+    from repro.obs.serving import ServingObs
+    from repro.serve.batcher import Request
+    from repro.serve.scheduler import ContinuousScheduler
+    cfg = ModelConfig(name="prefill-bench-serve", family="dense",
+                      num_layers=2, d_model=128, num_heads=4,
+                      num_kv_heads=2, d_ff=256, vocab_size=512,
+                      compute_dtype="float32")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    prog = Program.build(cfg, params, execution="xla")
+
+    long_lens = (1024, 768)
+    short_lens = tuple(int(v) for v in
+                       np.random.default_rng(7).integers(8, 33, size=4))
+    max_len = 1024 + 64
+
+    def run(prefill_chunk):
+        obs = ServingObs.create(cfg, trace=False)
+        sched = ContinuousScheduler(prog, capacity=4, max_len=max_len,
+                                    prefill_chunk=prefill_chunk,
+                                    telemetry=obs)
+        rng2 = np.random.default_rng(7)   # identical trace both runs
+        reqs = []
+        rid = 0
+        for plen in short_lens:
+            reqs.append(Request(rid=rid, max_new=24,
+                                prompt=list(rng2.integers(
+                                    1, cfg.vocab_size, size=plen))))
+            rid += 1
+        for plen in long_lens:
+            reqs.append(Request(rid=rid, max_new=8,
+                                prompt=list(rng2.integers(
+                                    1, cfg.vocab_size, size=plen))))
+            rid += 1
+        for r in reqs[:len(short_lens)]:
+            sched.submit(r)
+        # warm the shorts into decode before the long prompts arrive
+        for _ in range(3):
+            sched.step()
+        for r in reqs[len(short_lens):]:
+            sched.submit(r)
+        done = sched.drain()
+        pct = obs.tracker.percentiles()
+        return ({c.rid: c.tokens.tolist() for c in done},
+                {"tpot_max_ms": pct.get("tpot_ms", {}).get("max", 0.0),
+                 "tpot_p95_ms": pct.get("tpot_ms", {}).get("p95", 0.0),
+                 "ttft_p95_ms": pct.get("ttft_ms", {}).get("p95", 0.0),
+                 "prefill_chunks": sched.stats.prefill_chunks})
+
+    toks_mono, m_mono = run(None)
+    toks_chunk, m_chunk = run(chunk)
+    identical = toks_mono == toks_chunk
+    details["chunked_under_load"] = {
+        "execution": "xla", "chunk": chunk,
+        "long_prompt_lens": list(long_lens),
+        "short_prompts": len(short_lens),
+        "monolithic": m_mono, "chunked": m_chunk,
+        "decode_stall_reduction":
+            (m_mono["tpot_max_ms"] / m_chunk["tpot_max_ms"]
+             if m_chunk["tpot_max_ms"] else 1.0),
+        "tokens_identical_to_monolithic": identical}
+    return details["chunked_under_load"]
+
+
+def bench_sharded_prefill(mesh_arg: str, reps: int, details: dict):
+    """Sharded prefill row: the ladder LM prefilled through a mesh-built
+    Program (flash defers to the einsum path under a mesh; the row
+    measures GSPMD-partitioned fused MVMs + attention).  Parity-gated
+    against the single-device flash_fused row."""
+    import jax
+    from repro.api import Program
+    from repro.launch import mesh as mesh_lib
+    from repro.models import transformer as tfm
+
+    mesh = mesh_lib.parse_mesh(mesh_arg)
+    cfg = _bench_cfg(d_model=512)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 512
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    cache_len = S + 16
+
+    ref = Program.build(cfg, params, execution="photonic")
+    ms_ref, out_ref = _time_prefill_ms(ref, batch, cache_len, reps)
+    prog = Program.build(cfg, params, execution="photonic", mesh=mesh)
+    ms_sh, out_sh = _time_prefill_ms(prog, batch, cache_len, reps)
+    rel = _rel_l2(out_sh, out_ref)
+    details["sharded_prefill"] = {
+        "mesh": dict(mesh.shape), "d_model": cfg.d_model, "B": B, "S": S,
+        "single_device_ms": ms_ref, "sharded_ms": ms_sh,
+        "speedup_vs_single_device": ms_ref / ms_sh,
+        "parity_rel_l2_vs_single_device": rel,
+        "within_tol": rel <= PARITY_TOL}
+    return details["sharded_prefill"]
+
+
+def _metrics_snapshot(details: dict):
+    """The schema'd telemetry snapshot for the measured ladder (validated
+    against benchmarks/metrics_schema.json before it is persisted)."""
+    from repro.obs.check_schema import validate as validate_schema
+    from repro.obs.serving import ServingObs
+
+    ld = details["prefill_ladder"]
+    obs = ServingObs.create(_bench_cfg(), trace=False)
+    obs.meter.on_prefill(ld["model"]["B"] * ld["model"]["S"])
+    obs.tracker.ttft.record(ld["flash_fused_ms"])
+    snap = obs.snapshot()
+    schema_path = os.path.join(os.path.dirname(__file__),
+                               "metrics_schema.json")
+    with open(schema_path) as f:
+        errs = validate_schema(snap, json.load(f))
+    assert not errs, f"metrics snapshot violates metrics_schema.json: {errs}"
+    return snap
+
+
+def write_bench_prefill(details: dict, path: str = "BENCH_prefill.json"):
+    """Persist the TTFT ladder for CI trend tracking.  Merge-preserving:
+    keys an existing file holds but this run did not measure survive the
+    rewrite — a full-ladder run must not clobber the ``sharded_prefill``
+    row the sharded-smoke job wrote, and vice versa."""
+    rows: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                rows = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            rows = {}
+    ld = details["prefill_ladder"]
+    rows.update({
+        "split_ms": ld["split_ms"],
+        "flash_ms": ld["flash_ms"],
+        "flash_fused_ms": ld["flash_fused_ms"],
+        "flash_speedup_vs_split": ld["flash_speedup_vs_split"],
+        "flash_fused_speedup_vs_split": ld["flash_fused_speedup_vs_split"],
+        "parity_flash_vs_einsum_rel_l2":
+            ld["parity_flash_vs_einsum_rel_l2"],
+        "parity_vs_xla_rel_l2": ld["parity_vs_xla_rel_l2"],
+        "model": ld["model"],
+    })
+    if "chunked_under_load" in details:
+        rows["chunked_under_load"] = dict(details["chunked_under_load"])
+    if "sharded_prefill" in details:
+        rows["sharded_prefill"] = dict(details["sharded_prefill"])
+    if "metrics" in details:
+        rows["metrics"] = details["metrics"]
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def _merge_sharded_row(details: dict, path: str = "BENCH_prefill.json"):
+    """Merge just the sharded row into an existing BENCH_prefill.json (the
+    parity-only CI mode — ladder keys stay whatever bench-smoke wrote)."""
+    rows = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            rows = json.load(f)
+    rows["sharded_prefill"] = dict(details["sharded_prefill"])
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def _print_ladder(ld: dict, cu: dict | None):
+    print(f"prefill_split,{ld['split_ms']:.1f},einsum attention + split "
+          f"MVMs (S={ld['model']['S']})", flush=True)
+    print(f"prefill_flash,{ld['flash_ms']:.1f},"
+          f"{ld['flash_speedup_vs_split']:.2f}x over split (flash kernel, "
+          f"split MVMs)", flush=True)
+    print(f"prefill_flash_fused,{ld['flash_fused_ms']:.1f},"
+          f"{ld['flash_fused_speedup_vs_split']:.2f}x over split (flash + "
+          f"fused MVMs; parity vs einsum rel-L2 "
+          f"{ld['parity_flash_vs_einsum_rel_l2']:.4f}, vs xla "
+          f"{ld['parity_vs_xla_rel_l2']:.4f})", flush=True)
+    if cu is not None:
+        print(f"chunked_under_load,{cu['chunked']['tpot_max_ms']:.1f},"
+              f"max decode stall ms vs monolithic "
+              f"{cu['monolithic']['tpot_max_ms']:.1f}ms "
+              f"({cu['decode_stall_reduction']:.1f}x reduction, "
+              f"{cu['chunked']['prefill_chunks']} chunks, "
+              f"tokens identical: {cu['tokens_identical_to_monolithic']})",
+              flush=True)
+
+
+def _print_sharded_row(sd: dict):
+    print(f"sharded_prefill,{sd['sharded_ms']:.1f},mesh {sd['mesh']} "
+          f"d={sd['d_model']} B={sd['B']} S={sd['S']}: "
+          f"{sd['speedup_vs_single_device']:.2f}x vs single-device "
+          f"{sd['single_device_ms']:.1f}ms, parity rel-L2 "
+          f"{sd['parity_rel_l2_vs_single_device']:.4f}", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=2048,
+                    help="ladder prompt length (gate requires >= 2048)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--chunk", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast subset: 1 rep, skip the serving row's "
+                         "long tail where possible")
+    ap.add_argument("--sharded", default=None, metavar="DxM",
+                    help="also measure a sharded prefill row on a forced "
+                         "host-device mesh (sets XLA_FLAGS — must be the "
+                         "first jax use in this process)")
+    ap.add_argument("--parity-only", action="store_true",
+                    help="with --sharded: only the sharded row, gated on "
+                         "parity; merges into BENCH_prefill.json")
+    args = ap.parse_args(argv)
+    if args.sharded:
+        n = 1
+        for d in args.sharded.split("x"):
+            n *= int(d)
+        prev = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{prev} --xla_force_host_platform_device_count={max(n, 2)}"
+            .strip())
+    reps = 1 if args.smoke else args.reps
+
+    details: dict = {}
+    print("name,ms,derived")
+    if args.parity_only:
+        if not args.sharded:
+            ap.error("--parity-only requires --sharded DxM")
+        sd = bench_sharded_prefill(args.sharded, 1, details)
+        _print_sharded_row(sd)
+        _merge_sharded_row(details)
+        print("\n# sharded row merged into BENCH_prefill.json")
+        print(f"# sharded parity rel-L2 "
+              f"{sd['parity_rel_l2_vs_single_device']:.4f} "
+              f"(tol {PARITY_TOL}) "
+              f"-> {'OK' if sd['within_tol'] else 'FAIL'}")
+        return 0 if sd["within_tol"] else 1
+
+    ld = bench_prefill_ladder(args.seq, reps, details)
+    cu = bench_chunked_under_load(details, chunk=args.chunk)
+    _print_ladder(ld, cu)
+    sharded_ok = True
+    if args.sharded:
+        sd = bench_sharded_prefill(args.sharded, 1, details)
+        sharded_ok = sd["within_tol"]
+        _print_sharded_row(sd)
+    details["metrics"] = _metrics_snapshot(details)
+    write_bench_prefill(details)
+    print("\n# TTFT ladder written to BENCH_prefill.json")
+    speed_ok = (args.seq < 2048   # gate defined at S >= 2048
+                or ld["flash_fused_speedup_vs_split"] >= SPEEDUP_GATE)
+    ok = (speed_ok
+          and ld["parity_flash_vs_einsum_rel_l2"] <= PARITY_TOL
+          and cu["tokens_identical_to_monolithic"]
+          and sharded_ok)
+    print(f"# flash_fused {ld['flash_fused_speedup_vs_split']:.2f}x over "
+          f"split (gate >= {SPEEDUP_GATE} at S >= 2048), flash parity "
+          f"{ld['parity_flash_vs_einsum_rel_l2']:.4f} (tol {PARITY_TOL}), "
+          f"chunked tokens identical "
+          f"{cu['tokens_identical_to_monolithic']} "
+          f"-> {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

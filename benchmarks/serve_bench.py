@@ -24,14 +24,25 @@ import time
 import numpy as np
 
 
-def make_trace(vocab: int, n: int, seed: int = 0):
+def make_trace(vocab: int, n: int, seed: int = 0, long: int = 0,
+               long_range: tuple = (2048, 8192)):
     """Mixed prompt lengths AND mixed max_new — the distribution a static
-    wave pads twice for (prompt padding + lockstep decode length)."""
+    wave pads twice for (prompt padding + lockstep decode length).
+
+    ``long`` spreads that many long-prompt requests (lengths drawn from
+    ``long_range`` — the 2k-8k cohort of ISSUE-10) through the trace, so
+    the schedulers also face the TTFT/stall regime chunked prefill
+    targets, not just chat-length prompts."""
     rng = np.random.default_rng(seed)
     from repro.serve.batcher import Request
+    long_rids = set(int(round((i + 1) * n / (long + 1)))
+                    for i in range(long)) if long else set()
     reqs = []
     for rid in range(n):
-        plen = int(rng.integers(4, 33))
+        if rid in long_rids:
+            plen = int(rng.integers(long_range[0], long_range[1]))
+        else:
+            plen = int(rng.integers(4, 33))
         mn = int(rng.integers(2, 17))
         reqs.append(Request(
             rid=rid,
@@ -62,10 +73,12 @@ def run_wave(prog, reqs, wave_size: int):
     return comps, b.stats, time.time() - t0
 
 
-def run_continuous(prog, reqs, capacity: int, telemetry=None):
+def run_continuous(prog, reqs, capacity: int, telemetry=None,
+                   max_len: int = 48, prefill_chunk=None):
     from repro.serve.scheduler import ContinuousScheduler
-    s = ContinuousScheduler(prog, capacity=capacity, max_len=48,
-                            prefill_bucket=4, telemetry=telemetry)
+    s = ContinuousScheduler(prog, capacity=capacity, max_len=max_len,
+                            prefill_bucket=4, prefill_chunk=prefill_chunk,
+                            telemetry=telemetry)
     for r in reqs:
         s.submit(r)
     t0 = time.time()
@@ -78,8 +91,14 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--long", type=int, default=2,
+                    help="long-prompt cohort size (0 disables)")
+    ap.add_argument("--chunk", type=int, default=256,
+                    help="continuous-scheduler prefill chunk width")
     args = ap.parse_args()
     n = args.requests or (12 if args.quick else 24)
+    # --quick keeps the cohort but shrinks it to smoke lengths
+    long_range = (256, 513) if args.quick else (2048, 4097)
 
     import jax
     from repro.api import Program
@@ -92,7 +111,9 @@ def main():
     # ONE compile-once Program serves both schedulers (same bank, shared
     # jit-cell cache) — the comparison isolates pure scheduling overhead
     prog = Program.build(cfg, params)
-    reqs = make_trace(cfg.vocab_size, n)
+    reqs = make_trace(cfg.vocab_size, n, long=args.long,
+                      long_range=long_range)
+    max_len = max(48, max(len(r.prompt) + r.max_new for r in reqs) + 16)
     # telemetry on the continuous run: latency percentiles + the
     # PhotonicMeter's reuse-on vs reuse-off energy ledger (same schema as
     # live serving — validated below)
@@ -103,7 +124,10 @@ def main():
     results = {}
     for tag, runner in (("wave", run_wave), ("continuous", run_continuous)):
         if tag == "continuous":
-            comps, st, dt = runner(prog, reqs, args.slots, telemetry=obs)
+            comps, st, dt = runner(prog, reqs, args.slots, telemetry=obs,
+                                   max_len=max_len,
+                                   prefill_chunk=args.chunk if args.long
+                                   else None)
         else:
             comps, st, dt = runner(prog, reqs, args.slots)
         assert sorted(c.rid for c in comps) == list(range(n))
@@ -123,6 +147,7 @@ def main():
         else:
             details[tag]["idle_slot_fraction"] = round(st.idle_fraction, 4)
             details[tag]["prefill_pad_tokens"] = st.padded_prefill_tokens
+            details[tag]["prefill_chunks"] = st.prefill_chunks
         print(f"serve_{tag},{dt * 1e6 / max(st.generated_tokens, 1):.1f},"
               f"decode {tput:.1f} tok/s; overhead {st.overhead:.1%}",
               flush=True)
@@ -146,7 +171,10 @@ def main():
     details["energy"] = rep
     print(f"serve_ttft_p50,{pct['ttft_ms']['p50'] * 1e3:.1f},"
           f"p95 {pct['ttft_ms']['p95']:.1f}ms tpot p50 "
-          f"{pct['tpot_ms']['p50']:.2f}ms (continuous)", flush=True)
+          f"{pct['tpot_ms']['p50']:.2f}ms tpot max "
+          f"{pct['tpot_ms']['max']:.1f}ms (continuous; long cohort "
+          f"{args.long} prompts of {long_range[0]}-{long_range[1] - 1} "
+          f"tok, chunked at {args.chunk})", flush=True)
     print(f"serve_energy_reuse,0.0,reuse ratio {rep['reuse_ratio']:.3f} "
           f"({rep['amortization_passes_per_write']:.0f} passes/write); "
           f"vs reprogram-per-pass: E -{rep['energy_savings_frac']:.1%} "

@@ -212,6 +212,41 @@ def _prefill_cell(bank, batch, last, *, cfg: ModelConfig, backend,
     return logits[jnp.arange(B), last], caches
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "B", "cache_len"))
+def _empty_caches_cell(*, cfg: ModelConfig, B: int, cache_len: int):
+    """Zero capacity caches for the chunked-prefill entry points (the
+    monolithic ``_prefill_cell`` allocates its own inside the trace)."""
+    TRACE_COUNTS["init_caches"] += 1
+    return tfm.init_caches(cfg, B, cache_len,
+                           dtype=jnp.dtype(cfg.compute_dtype))
+
+
+@functools.lru_cache(maxsize=2)
+def _prefill_chunk_cells(donate: bool):
+    """The chunked-prefill cell, jitted once per donation mode.
+
+    ``q_offset`` is a TRACED operand (not a static key): one compiled cell
+    serves every chunk index of every prompt, so the retrace family is one
+    jit per (B, chunk width, cache_len) — bounded by the configuration —
+    instead of the one-jit-per-prompt-length family monolithic exact-length
+    prefill pays."""
+    donate_args = (2,) if donate else ()
+
+    @functools.partial(jax.jit, static_argnames=("cfg", "backend"),
+                       donate_argnums=donate_args)
+    def prefill_chunk_cell(bank, tokens, caches, q_offset, last, *,
+                           cfg: ModelConfig, backend):
+        TRACE_COUNTS["prefill_chunk"] += 1
+        B = tokens.shape[0]
+        logits, caches, _ = tfm.forward(
+            bank, cfg, {"tokens": tokens}, mode="prefill_chunk",
+            caches=caches, pos=q_offset, execution=backend,
+            act_pspec=_decode_act_pspec(backend, B))
+        return logits[jnp.arange(B), last], caches
+
+    return prefill_chunk_cell
+
+
 @functools.lru_cache(maxsize=2)
 def _decode_cells(donate: bool):
     """The two decode cells, jitted once per donation mode.  The lru_cache
@@ -373,6 +408,55 @@ class Program:
         return _prefill_cell(self.bank, batch, jnp.asarray(last, jnp.int32),
                              cfg=self.cfg, backend=self.backend,
                              cache_len=cache_len)
+
+    def empty_caches(self, B: int, cache_len: int):
+        """Zero capacity caches sized for ``B`` rows — the staging buffers
+        the chunked-prefill cells fill in place."""
+        return _empty_caches_cell(cfg=self.cfg, B=B, cache_len=cache_len)
+
+    def prefill_chunk(self, tokens, caches, q_offset, last=None):
+        """One fixed-width prefill chunk into existing capacity caches.
+
+        tokens: (B, W) — the prompt slice [q_offset, q_offset+W).
+        ``q_offset`` is traced (scalar int32): every chunk of every prompt
+        reuses the one compiled cell for this (B, W, cache_len).  ``last``
+        (B,) indexes logits WITHIN the chunk (default: final column).
+        Caches are donated on accelerators — thread the returned ones."""
+        B, W = tokens.shape[0], tokens.shape[1]
+        if last is None:
+            last = jnp.full((B,), W - 1, jnp.int32)
+        if metrics_lib.enabled():
+            metrics_lib.counter("program.steps", kind="prefill_chunk").inc()
+        cell = _prefill_chunk_cells(_donate_caches())
+        return cell(self.bank, tokens, caches, jnp.asarray(q_offset,
+                                                           jnp.int32),
+                    jnp.asarray(last, jnp.int32), cfg=self.cfg,
+                    backend=self.backend)
+
+    def prefill_chunked(self, batch, cache_len: int, chunk: int, last=None):
+        """Chunked prefill over a whole batch: fixed-width query chunks
+        (tail zero-padded to ``chunk``, causally invisible to real rows)
+        through :meth:`prefill_chunk`.  Semantically equivalent to
+        :meth:`prefill` — bit-identical on xla; within the W8A8 tolerance
+        on photonic, where per-chunk activation scales differ from
+        whole-prompt scales.  Returns (logits (B, V), caches)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if last is None:
+            last = jnp.full((B,), S - 1, jnp.int32)
+        last = jnp.asarray(last, jnp.int32)
+        S_pad = ((S + chunk - 1) // chunk) * chunk
+        if S_pad != S:
+            tokens = jnp.pad(tokens, ((0, 0), (0, S_pad - S)))
+        caches = self.empty_caches(B, cache_len)
+        out = None
+        for off in range(0, S_pad, chunk):
+            idx = jnp.clip(last - off, 0, chunk - 1)
+            lg, caches = self.prefill_chunk(tokens[:, off:off + chunk],
+                                            caches, off, last=idx)
+            hit = (last >= off) & (last < off + chunk)
+            out = lg if out is None else jnp.where(hit[:, None], lg, out)
+        return out, caches
 
     def decode(self, tokens, caches, pos):
         """One token per sequence.  tokens: (B, 1); ``pos`` scalar (aligned)

@@ -74,6 +74,7 @@ from repro.obs import metrics as _metrics
 from repro.sharding import partition as _partition
 from repro.core.prepared import (PreparedTensor, quantize_weight,
                                  quantize_weight_t)
+from repro.kernels import flash_attention as _fa
 from repro.kernels import ops
 from repro.kernels.photonic_mvm import tile_plan
 
@@ -226,6 +227,13 @@ class Backend:
                                       # republishing drift ages retraces the
                                       # affected cells; None / all-zero is
                                       # bit-identical to the clean path.
+    flash: bool = True                # route long-sequence attention through
+                                      # the Pallas flash kernel (photonic
+                                      # only; xla keeps the einsum/scan)
+    flash_min_seq: int = 512          # query lengths below this take the
+                                      # einsum/scan path — at short S the
+                                      # blocked kernel's grid overhead loses
+                                      # to one fused einsum
 
     def __post_init__(self):
         if self.execution not in EXECUTIONS:
@@ -271,6 +279,48 @@ class Backend:
             return self.bm, self.bk, self.bn
         return tile_plan(M, K, N, cap_m=self.bm, cap_k=self.bk,
                          cap_n=self.bn)
+
+    # ----------------------------------------------------------- attention
+    def use_flash(self, q_len: int) -> bool:
+        """Whether a q_len-row attention routes through the flash kernel.
+
+        Photonic execution only (xla keeps the reference einsum/scan), and
+        only at or above ``flash_min_seq`` query rows.  Under an active mesh
+        the einsum path is kept too: GSPMD partitions it for free, while the
+        Pallas kernel would need an explicit shard_map schedule."""
+        return (self.is_photonic and self.flash and not self.mesh_active
+                and q_len >= self.flash_min_seq)
+
+    def attention(self, q, k, v, *, causal: bool = True, q_offset=None):
+        """Sequence attention under the backend seam — the prefill analogue
+        of ``dot``.
+
+        q: (B, Sq, H, hd); k: (B, L, KV, hd); v: (B, L, KV, hd_v) with
+        H % KV == 0 (GQA groups; MLA rides on hd_v != hd).  Returns
+        (B, Sq, H * hd_v), heads flattened like ``_gqa_attend``.
+
+        Long photonic sequences run the blocked Pallas flash kernel
+        (``kernels/flash_attention.py`` — online softmax, Sq x L scores
+        never materialized, ``interpret`` resolved from the platform like
+        the MVM kernels); everything else takes the einsum/scan reference
+        in ``models/attention.py``.  ``q_offset`` (python int or traced
+        scalar) places query row i at absolute position q_offset + i so a
+        chunked prefill against a partially filled KV cache masks exactly
+        like the monolithic pass.  Being a ``Backend`` method, the routing
+        decision (``flash``/``flash_min_seq``) is part of the static
+        jit-cell key like every other field."""
+        B, Sq, H, _ = q.shape
+        L, hd_v = k.shape[1], v.shape[-1]
+        if self.use_flash(Sq):
+            bq, bk_ = _fa.default_blocks(Sq, L, _fa.default_interpret())
+            _metrics.record_kernel_call("flash_attn", bq, bk_, hd_v)
+            with jax.named_scope(f"photonic.flash_attn.{bq}x{bk_}"):
+                o = ops.flash_attention(q, k, v, causal=causal,
+                                        q_offset=q_offset)
+            return o.reshape(B, Sq, H * hd_v)
+        from repro.models import attention as _attn   # lazy: models -> core
+        return _attn.attend_seq_xla(q, k, v, causal=causal,
+                                    q_offset=q_offset)
 
     # ------------------------------------------------------------- matmuls
     def dot(self, x, w, *, transpose: bool = False, bias=None,

@@ -38,7 +38,7 @@ from repro.kernels.photonic_mvm import round_up, tile_plan  # noqa: F401
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return _fa.default_interpret()
 
 
 # =========================================================================
@@ -196,16 +196,23 @@ def blend_shuffle(x, bias, block_perm, *, block=128, activation="relu"):
     return y.reshape(*lead, x.shape[-1])
 
 
-def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
-    """q,k,v: (B, S, H, hd) MHA (equal head counts). Returns (B, S, H, hd)."""
-    B, S, H, hd = q.shape
-    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    o = _fa.flash_attention(qf, kf, vf, causal=causal,
-                            bq=min(bq, S), bk=min(bk, S),
-                            interpret=_interpret())
-    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+def flash_attention(q, k, v, *, causal=True, q_offset=None, bq=None,
+                    bk=None):
+    """Tensor-shaped flash attention: q (B, Sq, H, hd); k (B, L, KV, hd);
+    v (B, L, KV, hd_v) with H % KV == 0 (GQA groups; MLA's hd_v != hd rides
+    on the separate v head dim).  Head flattening keeps the (B, S, KV, G)
+    ordering of ``_gqa_attend`` so query row b*H + kv*G + g reads kv row
+    b*KV + kv inside the kernel.  Returns (B, Sq, H, hd_v).  ``q_offset``
+    shifts the causal mask for chunked prefill; block sizes and interpret
+    default from the platform (``flash_attention.default_blocks``)."""
+    B, Sq, H, hd = q.shape
+    _, L, KV, hdv = v.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, L, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, L, hdv)
+    o = _fa.flash_attention(qf, kf, vf, causal=causal, q_offset=q_offset,
+                            bq=bq, bk=bk, interpret=_interpret())
+    return o.reshape(B, H, Sq, hdv).transpose(0, 2, 1, 3)
 
 
 def ssd_chunk(x, dA, B, C):

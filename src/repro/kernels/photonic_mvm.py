@@ -294,18 +294,39 @@ def _fit_dim(d: int, unit: int, cap: int) -> int:
     return unit
 
 
+def _fit_rows(M: int, cap: int) -> int:
+    """Row tile for an M-row matmul, covering both serving and prefill
+    widths.  Serving widths (M <= cap) round to the 8-row sublane and run
+    one grid step (a B=2 decode step runs an 8-row tile, not a 128-row
+    one).  Prefill widths (M = B*S >> cap) prefer the largest multiple of
+    8 <= cap that divides the rounded row count — zero padded rows across
+    hundreds of grid steps — but never shrink below cap/2: a ragged
+    prefill keeps full tiles plus one padded step instead of degrading
+    every step to a sliver."""
+    mu = round_up(M, 8)
+    if mu <= cap:
+        return mu
+    lo = max(8, cap // 2)
+    for t in range(cap - cap % 8, lo - 1, -8):
+        if mu % t == 0:
+            return t
+    return cap
+
+
 def tile_plan(M: int, K: int, N: int, *, cap_m: int = 128, cap_k: int = 512,
               cap_n: int = 512) -> tuple:
     """Derive ``(bm, bk, bn)`` from actual operand shapes.
 
-    The serving-width rule of DESIGN.md §Fused decode path: ``bm`` rounds the
-    real row count to the 8-row sublane (a B=2 decode step runs an 8-row
-    tile, not a 128-row one — 16x less padded MXU work) and caps at
+    The serving-width rule of DESIGN.md §Fused decode path: ``bm`` resolves
+    via :func:`_fit_rows` — sublane-rounded single step at decode widths,
+    divisor-preferring full tiles at prefill widths (M = B*S) — and caps at
     ``cap_m``; ``bk``/``bn`` keep the 128 lane unit but grow to swallow a
     whole d_model/d_ff axis in one grid step when it fits the cap, which
     both feeds the MXU longer per weight fetch and eliminates the
-    pad/slice HBM round-trip for already-aligned shapes."""
-    return (min(cap_m, round_up(M, 8)),
+    pad/slice HBM round-trip for already-aligned shapes.  ``bm`` choices
+    never change numerics (fp32 accumulation order is a ``bk`` property),
+    so the fused-vs-split bit-identity gates hold at any row plan."""
+    return (_fit_rows(M, cap_m),
             _fit_dim(K, 128, cap_k),
             _fit_dim(N, 128, cap_n))
 

@@ -68,13 +68,28 @@ def blend_shuffle_ref(x, bias, block_perm, block, activation="relu"):
     return y.astype(x.dtype)
 
 
-def flash_attention_ref(q, k, v, causal=True):
-    BH, S, hd = q.shape
+def flash_attention_ref(q, k, v, causal=True, q_offset=0, kv_len=None):
+    """Oracle for the flash kernel's full layout contract.
+
+    q: (BH_q, Sq, hd); k: (BH_kv, L, hd); v: (BH_kv, L, hd_v) with query
+    row b reading kv row b // (BH_q // BH_kv) — the GQA grid map.  The
+    causal mask runs on absolute positions (query i at q_offset + i, keys
+    at 0..L-1) and ``kv_len`` truncates trailing keys, mirroring the
+    kernel's ragged-L padding semantics."""
+    BHq, Sq, hd = q.shape
+    BHkv, L, _ = k.shape
+    G = BHq // BHkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=0)
+        v = jnp.repeat(v, G, axis=0)
     s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / (hd ** 0.5)
+    kj = jnp.arange(L)[None, :]
+    mask = kj < (L if kv_len is None else kv_len)
     if causal:
-        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
-        s = jnp.where(mask, s, -1e30)
+        qi = q_offset + jnp.arange(Sq)[:, None]
+        mask = mask & (qi >= kj)
+    s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkh->bqh", p,
                       v.astype(jnp.float32)).astype(q.dtype)

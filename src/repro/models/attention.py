@@ -91,19 +91,24 @@ def _gqa_attend(q, k, v, mask):
     return out.reshape(B, S, H * hd_v).astype(v.dtype)
 
 
-def _attend_seq(q, k, v, causal: bool):
-    """Full-sequence attention dispatcher.
+def attend_seq_xla(q, k, v, *, causal: bool, q_offset=None):
+    """The einsum/scan attention reference — ``Backend.attention``'s
+    fallback path (short sequences, xla execution, active meshes).
 
-    Short sequences take the direct einsum; long ones a lax.scan over query
-    chunks (peak memory O(bq * L) instead of O(S * L) — this is what makes
-    the 32k-prefill cells fit in HBM; the Pallas flash kernel is the
-    TPU-native realization of the same schedule)."""
+    Short query runs take the direct einsum; long ones a lax.scan over
+    query chunks (peak memory O(bq * L) instead of O(S * L) — this is what
+    makes the 32k-prefill cells fit in HBM; the Pallas flash kernel is the
+    TPU-native realization of the same schedule).  ``q_offset`` (python int
+    or traced scalar) places query row i at absolute position q_offset + i
+    in the causal mask, keys at 0..L-1 — the chunked-prefill mask."""
     B, S, H, hd = q.shape
+    L = k.shape[1]
+    off = 0 if q_offset is None else q_offset
     if S <= CHUNKED_ATTN_THRESHOLD or S % CHUNK_Q != 0:
         if causal:
-            mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+            mask = (off + jnp.arange(S))[:, None] >= jnp.arange(L)[None, :]
         else:
-            mask = jnp.ones((S, k.shape[1]), dtype=bool)
+            mask = jnp.ones((S, L), dtype=bool)
         return _gqa_attend(q, k, v, mask)
     nq = S // CHUNK_Q
     hd_v = v.shape[-1]
@@ -111,8 +116,7 @@ def _attend_seq(q, k, v, causal: bool):
 
     def body(_, inp):
         qc, i = inp
-        L = k.shape[1]
-        q_pos = i * CHUNK_Q + jnp.arange(CHUNK_Q)
+        q_pos = off + i * CHUNK_Q + jnp.arange(CHUNK_Q)
         if causal:
             mask = q_pos[:, None] >= jnp.arange(L)[None, :]
         else:
@@ -121,6 +125,13 @@ def _attend_seq(q, k, v, causal: bool):
 
     _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nq)))
     return outs.transpose(1, 0, 2, 3).reshape(B, S, H * hd_v)
+
+
+def _attend_seq(q, k, v, causal: bool, backend=None, q_offset=None):
+    """Full-sequence attention through the backend seam: the Backend
+    decides flash kernel vs einsum/scan (``Backend.attention``)."""
+    return resolve_backend(backend).attention(q, k, v, causal=causal,
+                                              q_offset=q_offset)
 
 
 def gqa_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
@@ -141,7 +152,7 @@ def gqa_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
     cos, sin = rope_angles(positions, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
-    out = _attend_seq(q, k, v, causal)
+    out = _attend_seq(q, k, v, causal, backend)
     y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
                   tp_hint="row")
     if cache is not None:
@@ -151,6 +162,41 @@ def gqa_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
             cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
         return y, {"k": ck, "v": cv}
     return y, None
+
+
+def gqa_prefill_chunk(p, cfg: ModelConfig, x, cache, q_offset, *,
+                      transpose=False, backend=None):
+    """One query chunk of a chunked prefill: x (B, C, d) holds prompt
+    tokens at absolute positions q_offset..q_offset+C-1.
+
+    The chunk's K/V are written into the capacity ``cache`` at
+    ``q_offset`` (a traced scalar — one jit serves every chunk index), and
+    the chunk's queries attend against the WHOLE updated buffer with the
+    absolute-position causal mask (``Backend.attention``'s q_offset):
+    positions beyond the chunk hold garbage, but causality masks every key
+    past q_offset + C - 1, so the result is bit-comparable to the
+    monolithic prefill's rows.  Returns (y, filled cache)."""
+    B, C, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _maybe_t(x, p["wq"].astype(x.dtype), transpose,
+                 backend).reshape(B, C, H, hd)
+    k = _maybe_t(x, p["wk"].astype(x.dtype), transpose,
+                 backend).reshape(B, C, KV, hd)
+    v = _maybe_t(x, p["wv"].astype(x.dtype), transpose,
+                 backend).reshape(B, C, KV, hd)
+    positions = q_offset + jnp.arange(C)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, q_offset, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, q_offset, 0, 0))
+    out = _attend_seq(q, ck.astype(x.dtype), cv.astype(x.dtype), True,
+                      backend, q_offset)
+    y = _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
+                 tp_hint="row")
+    return y, {"k": ck, "v": cv}
 
 
 def _attend_decode(q, ck, cv, k_new, v_new, pos):
@@ -295,7 +341,7 @@ def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
                                               (B, S, H, m.qk_rope_dim))],
                         axis=-1)
     q = jnp.concatenate([qn, qr], axis=-1)
-    out = _attend_seq(q, k, v, causal)          # KV == H here
+    out = _attend_seq(q, k, v, causal, backend)     # KV == H here
     y = bk.dot(out, p["wo"].astype(x.dtype), transpose=False,
                tp_hint="row")
     if cache is not None:
@@ -305,6 +351,40 @@ def mla_forward(p, cfg: ModelConfig, x, *, transpose=False, causal=True,
             cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0))
         return y, {"ckv": cc, "kr": ck}
     return y, None
+
+
+def mla_prefill_chunk(p, cfg: ModelConfig, x, cache, q_offset, *,
+                      transpose=False, backend=None):
+    """Chunked-prefill step for MLA: the chunk's compressed latents are
+    written into the cache at ``q_offset``, then the FULL cached latent
+    buffer is up-projected and attended with the absolute-position causal
+    mask — the same recompute-from-latents shape the absorbed decode path
+    uses, at chunk width.  The up-projection of the garbage tail is wasted
+    work the causal mask discards; chunking trades that for bounded
+    per-step latency and a fixed jit family."""
+    bk = resolve_backend(backend)
+    m = cfg.mla
+    B, C, _ = x.shape
+    H = cfg.num_heads
+    positions = q_offset + jnp.arange(C)
+    qn, qr, ckv_new, kr_new = _mla_qkr(p, cfg, x, positions, backend)
+    cc = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, q_offset, 0))
+    ckr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, q_offset, 0))
+    L = cc.shape[1]
+    ukv = bk.dot(cc.astype(x.dtype), p["w_ukv"].astype(x.dtype),
+                 transpose=False)
+    ukv = ukv.reshape(B, L, H, m.qk_nope_dim + m.v_head_dim)
+    kn, v = ukv[..., :m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(ckr.astype(x.dtype)[:, :, None, :],
+                              (B, L, H, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    out = _attend_seq(q, k, v, True, backend, q_offset)
+    y = bk.dot(out, p["wo"].astype(x.dtype), transpose=False,
+               tp_hint="row")
+    return y, {"ckv": cc, "kr": ckr}
 
 
 def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, transpose=False,
@@ -391,8 +471,6 @@ def cross_attn_forward(p, cfg: ModelConfig, x, kv, *, transpose=False,
     H, hd = cfg.num_heads, cfg.head_dim
     q = _maybe_t(x, p["wq"].astype(x.dtype), transpose,
                  backend).reshape(B, S, H, hd)
-    M = kv["ck"].shape[1]
-    mask = jnp.ones((S, M), dtype=bool)
-    out = _gqa_attend(q, kv["ck"], kv["cv"], mask)
+    out = _attend_seq(q, kv["ck"], kv["cv"], False, backend)
     return _maybe_t(out, p["wo"].astype(x.dtype), transpose, backend,
                   tp_hint="row")

@@ -133,6 +133,12 @@ def apply_layer(p, cfg: ModelConfig, h, cache, aux, *, mixer_kind, ffn_kind,
                 mode, causal, pos, ctx, transpose):
     """One pre-norm residual layer.  Returns (h, cache, aux)."""
     bk = ctx.get("backend") or backend_lib.XLA
+    if mode == "prefill_chunk" and mixer_kind != "attn":
+        # SSM state integration and cross-attn memory streams would need
+        # chunk-to-chunk state threading; the scheduler falls back to
+        # monolithic prefill for those stacks (serve/scheduler.py)
+        raise ValueError(f"chunked prefill supports attention mixers only, "
+                         f"got {mixer_kind!r}")
     hn = apply_norm(p["norm1"], h, cfg.norm, cfg.norm_eps)
     new_cache = cache
     if mixer_kind == "attn":
@@ -143,6 +149,14 @@ def apply_layer(p, cfg: ModelConfig, h, cache, aux, *, mixer_kind, ffn_kind,
         if mode == "decode":
             y, new_cache = dec(p["mixer"], cfg, hn, cache, pos,
                                transpose=transpose, backend=bk)
+        elif mode == "prefill_chunk":
+            # ``pos`` is the chunk's q_offset (traced scalar — one jit per
+            # chunk width, not per chunk index); the chunk's K/V land in
+            # the capacity cache at that offset
+            chunk = (attn.mla_prefill_chunk if cfg.mla is not None
+                     else attn.gqa_prefill_chunk)
+            y, new_cache = chunk(p["mixer"], cfg, hn, cache, pos,
+                                 transpose=transpose, backend=bk)
         else:
             y, new_cache = fwd(p["mixer"], cfg, hn, transpose=transpose,
                                causal=causal,
@@ -362,9 +376,13 @@ def forward(params, cfg: ModelConfig, batch, *, mode="train", caches=None,
     batch: {"tokens": (B, S)} plus modality extras:
       vlm:   {"image_embeds": (B, M, d_vision)}
       audio: {"audio_embeds": (B, F, d_audio)}
-    mode: train | prefill | decode (decode: S == 1 and ``pos`` is a scalar —
-      aligned batch — or a (B,) int vector of per-slot positions for the
-      continuous scheduler; legacy_decode supports scalar ``pos`` only).
+    mode: train | prefill | prefill_chunk | decode (decode: S == 1 and
+      ``pos`` is a scalar — aligned batch — or a (B,) int vector of per-slot
+      positions for the continuous scheduler; legacy_decode supports scalar
+      ``pos`` only.  prefill_chunk: tokens (B, C) is one query chunk of a
+      longer prompt, ``pos`` is its q_offset (traced scalar), and ``caches``
+      must hold the partially-filled capacity buffers — attention-only
+      stacks; see models/attention.gqa_prefill_chunk).
     caches: pytree {segment: [R, T, {...}]} (prefill output / decode in-out).
     execution: overrides ``cfg.execution`` ("xla" | "photonic" | Backend);
       None uses the config's backend (core/backend.py).

@@ -97,7 +97,7 @@ class ContinuousStats(ServingStats):
 
     FIELDS = ServingStats.FIELDS + ("prefills", "decode_steps",
                                     "padded_prefill_tokens",
-                                    "idle_slot_steps")
+                                    "idle_slot_steps", "prefill_chunks")
 
     def __init__(self, registry: _metrics.MetricsRegistry | None = None,
                  _capacity: int = 1):
@@ -135,6 +135,6 @@ class ContinuousStats(ServingStats):
 
 
 for _f in ("prefills", "decode_steps", "padded_prefill_tokens",
-           "idle_slot_steps"):
+           "idle_slot_steps", "prefill_chunks"):
     setattr(ContinuousStats, _f, _counter_property(_f))
 del _f

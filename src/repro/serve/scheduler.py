@@ -136,6 +136,7 @@ class ContinuousScheduler:
                  max_len: int = 256, pad_id: int = 0,
                  temperature: float = 0.0, seed: int = 0,
                  prefill_bucket: int = 16,
+                 prefill_chunk: Optional[int] = None,
                  admission: Optional[ReuseAwareAdmission] = None,
                  mesh=None,
                  on_token: Optional[Callable[[int, int], None]] = None,
@@ -200,6 +201,28 @@ class ContinuousScheduler:
         self._exact_prefill = any(
             "ssm" in spec.mixer_kinds for spec in tfm.build_segments(cfg)
             if spec.stream != "encoder")
+        # chunked prefill (DESIGN.md §Prefill path): long prompts run as
+        # fixed-width query chunks interleaved with decode steps, so one
+        # admission never stalls in-flight decodes for a whole long prefill,
+        # and the retrace family collapses to one jit per chunk width (the
+        # chunk offset is a traced operand).  Attention-only stacks only:
+        # SSM state and conv tails integrate every position in one scan,
+        # and cross/encoder memory is not chunk-resumable.
+        self.prefill_chunk = prefill_chunk
+        self._chunkable = (
+            prefill_chunk is not None
+            and (self.mesh is None or self.mesh.size <= 1)
+            and all(k == "attn"
+                    for spec in tfm.build_segments(cfg)
+                    if spec.stream != "encoder"
+                    for k in spec.mixer_kinds))
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        # slot -> in-progress chunked prefill (staging caches at pool
+        # max_len, padded prompt, next chunk offset).  Slots listed here
+        # are allocated but NOT decoded: the decode loop skips them until
+        # their final chunk lands and write_prefill publishes the cache.
+        self._prefilling: dict[int, dict] = {}
         self.queue: collections.deque[Request] = collections.deque()
         # telemetry: an optional repro.obs.serving.ServingObs — request-
         # lifecycle latency histograms (TTFT/TPOT/e2e), Chrome-trace spans,
@@ -240,8 +263,9 @@ class ContinuousScheduler:
 
     # ------------------------------------------------------------ one step
     def step(self) -> list[Completion]:
-        """Admit (policy-bounded) new requests, then decode one token for
-        every in-flight slot.  Returns requests completed this step."""
+        """Admit (policy-bounded) new requests, advance one prefill chunk
+        per staging slot, then decode one token for every in-flight slot.
+        Returns requests completed this step."""
         done: list[Completion] = []
         n = self.admission.admit_count(queued=len(self.queue),
                                        free=self.pool.num_free,
@@ -250,7 +274,9 @@ class ContinuousScheduler:
             comp = self._admit_one(self.queue.popleft())
             if comp is not None:          # max_new == 1: done at prefill
                 done.append(comp)
-        if self.pool.num_active:
+        if self._prefilling:
+            done.extend(self._advance_chunks())
+        if self.pool.num_active > len(self._prefilling):
             done.extend(self._decode_once())
         if self.obs and self.obs.tracer.enabled:
             self.obs.tracer.counter("active_slots", self.pool.num_active)
@@ -269,6 +295,10 @@ class ContinuousScheduler:
 
     def _admit_one(self, req: Request) -> Optional[Completion]:
         plen = len(req.prompt)
+        if (self._chunkable and not req.extras
+                and plen > self.prefill_chunk):
+            self._start_chunked(req)
+            return None
         bucket = self._bucket(plen)
         state = SlotState(rid=req.rid, prompt_len=plen, max_new=req.max_new,
                           eos_id=req.eos_id,
@@ -306,6 +336,73 @@ class ContinuousScheduler:
         self.stats.useful_steps += plen
         return self._commit_token(slot, tok)
 
+    def _start_chunked(self, req: Request) -> None:
+        """Allocate a slot and stage a chunked prefill: the prompt runs in
+        ``prefill_chunk``-wide pieces (tail zero-padded, causally invisible),
+        one chunk per scheduler step, into a batch-1 staging cache at the
+        pool's max_len — so every chunk of every request reuses the one
+        compiled cell per chunk width.  The slot joins the decode batch only
+        when the last chunk lands (``_advance_chunks``)."""
+        W = self.prefill_chunk
+        plen = len(req.prompt)
+        padded = -(-plen // W) * W
+        state = SlotState(rid=req.rid, prompt_len=plen, max_new=req.max_new,
+                          eos_id=req.eos_id,
+                          prompt=np.asarray(req.prompt, np.int32),
+                          padded_to=padded)
+        slot = self.pool.allocate(state)
+        if self.obs:
+            self.obs.tracker.on_admit(req.rid, plen, padded)
+            if self.obs.meter is not None:
+                # the chunks stream `padded` positions through the stack
+                self.obs.meter.on_prefill(padded)
+        if self.residency is not None:
+            self.residency.on_prefill(padded)
+        toks = np.full((1, padded), self.pad_id, np.int32)
+        toks[0, :plen] = req.prompt
+        self._prefilling[slot] = {
+            "state": state, "tokens": toks, "off": 0,
+            "caches": self.program.empty_caches(1, self.pool.max_len)}
+        self.stats.requests += 1
+        self.stats.prefills += 1
+        self.stats.prompt_tokens += plen
+        self.stats.padded_prefill_tokens += padded - plen
+        self.stats.slot_steps += padded
+        self.stats.useful_steps += plen
+
+    def _advance_chunks(self) -> list[Completion]:
+        """One prefill chunk for every staging slot.  Final chunks publish:
+        write the staged cache into the pool, sample the first token (TTFT
+        fires here), and hand the slot to the decode loop."""
+        done: list[Completion] = []
+        W = self.prefill_chunk
+        tr = self.obs.tracer if self.obs else None
+        for slot in sorted(self._prefilling):
+            st = self._prefilling[slot]
+            state, off = st["state"], st["off"]
+            last = off + W >= st["tokens"].shape[1]
+            # plen-1 always falls inside the final (padded) chunk
+            idx = state.prompt_len - 1 - off if last else W - 1
+            with (tr.span("prefill_chunk", rid=state.rid, off=off)
+                  if tr and tr.enabled else contextlib.nullcontext()):
+                logits, st["caches"] = self.program.prefill_chunk(
+                    jnp.asarray(st["tokens"][:, off:off + W]), st["caches"],
+                    off, last=jnp.asarray([idx], jnp.int32))
+            st["off"] = off + W
+            self.stats.prefill_chunks += 1
+            if not last:
+                continue
+            del self._prefilling[slot]
+            self.pool.write_prefill(slot, st["caches"], state.prompt_len)
+            tok = int(np.asarray(api.sample(logits, self.cfg.vocab_size,
+                                            self._next_key(),
+                                            self.temperature))[0])
+            self._cur[slot, 0] = tok
+            comp = self._commit_token(slot, tok)
+            if comp is not None:
+                done.append(comp)
+        return done
+
     def _commit_token(self, slot: int, tok: int) -> Optional[Completion]:
         """Record one generated token; complete/free the slot if done."""
         state = self.pool.slots[slot]
@@ -339,7 +436,12 @@ class ContinuousScheduler:
         return None
 
     def _decode_once(self) -> list[Completion]:
-        active = self.pool.active_slots()
+        # staging (chunk-prefilling) slots ride the full-pool step as idle
+        # lanes: their position is 0, so the step's garbage delta write at
+        # position 0 is dead data — write_prefill later overwrites the whole
+        # slot — and they must not commit tokens or advance
+        active = [s for s in self.pool.active_slots()
+                  if s not in self._prefilling]
         self.stats.observe_active(len(active))
         if self.obs and self.obs.meter is not None:
             # the fused decode step runs the FULL pool through the stack —

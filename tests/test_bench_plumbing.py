@@ -20,7 +20,8 @@ import pytest
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
     __file__))))
 
-from benchmarks import backend_bench, drift_bench, residency_bench  # noqa: E402
+from benchmarks import (backend_bench, drift_bench, prefill_bench,  # noqa: E402
+                        residency_bench)
 
 
 def _ladder_details():
@@ -142,3 +143,69 @@ def test_write_bench_drift_tolerates_corrupt_existing(tmp_path):
     drift_bench.write_bench_drift({"config": {"rungs": 3}}, path)
     with open(path) as f:
         assert json.load(f) == {"config": {"rungs": 3}}
+
+
+# =====================================================================
+# PR-10: BENCH_prefill.json honors the same merge contract
+# =====================================================================
+def _prefill_ladder_details():
+    return {"prefill_ladder": {
+        "model": {"d_model": 256, "d_ff": 512, "num_layers": 2, "B": 1,
+                  "S": 2048},
+        "split_ms": 1800.0, "flash_ms": 540.0, "flash_fused_ms": 600.0,
+        "flash_speedup_vs_split": 3.3,
+        "flash_fused_speedup_vs_split": 3.0,
+        "parity_flash_vs_einsum_rel_l2": 0.03,
+        "parity_vs_xla_rel_l2": 0.16},
+        "metrics": {"schema_version": 1}}
+
+
+def _prefill_sharded_details():
+    return {"sharded_prefill": {
+        "mesh": {"data": 1, "model": 2}, "d_model": 512, "B": 2, "S": 512,
+        "single_device_ms": 100.0, "sharded_ms": 80.0,
+        "speedup_vs_single_device": 1.25,
+        "parity_rel_l2_vs_single_device": 0.01, "within_tol": True}}
+
+
+def test_prefill_full_rewrite_preserves_sharded_row(tmp_path):
+    path = str(tmp_path / "BENCH_prefill.json")
+    prefill_bench._merge_sharded_row(_prefill_sharded_details(), path)
+    prefill_bench.write_bench_prefill(_prefill_ladder_details(), path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["sharded_prefill"]["sharded_ms"] == 80.0
+    assert rows["flash_fused_ms"] == 600.0
+    assert rows["metrics"] == {"schema_version": 1}
+
+
+def test_prefill_merge_sharded_row_preserves_ladder(tmp_path):
+    path = str(tmp_path / "BENCH_prefill.json")
+    prefill_bench.write_bench_prefill(_prefill_ladder_details(), path)
+    prefill_bench._merge_sharded_row(_prefill_sharded_details(), path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["split_ms"] == 1800.0
+    assert rows["sharded_prefill"]["within_tol"] is True
+
+
+def test_prefill_sharded_measured_in_same_run_wins(tmp_path):
+    path = str(tmp_path / "BENCH_prefill.json")
+    prefill_bench._merge_sharded_row(_prefill_sharded_details(), path)
+    details = _prefill_ladder_details()
+    details.update(_prefill_sharded_details())
+    details["sharded_prefill"]["sharded_ms"] = 55.0
+    prefill_bench.write_bench_prefill(details, path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["sharded_prefill"]["sharded_ms"] == 55.0
+
+
+def test_write_bench_prefill_tolerates_corrupt_existing(tmp_path):
+    path = str(tmp_path / "BENCH_prefill.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    prefill_bench.write_bench_prefill(_prefill_ladder_details(), path)
+    with open(path) as f:
+        rows = json.load(f)
+    assert rows["flash_ms"] == 540.0 and "sharded_prefill" not in rows

@@ -374,3 +374,125 @@ def test_backend_dot_fused_vs_unfused_bit_identical(dtype):
         b = u.dot(x, w_, **kw)
         assert np.array_equal(np.asarray(a, np.float32),
                               np.asarray(b, np.float32)), (dtype, kw)
+
+
+# ======================================================================
+# flash attention: head-layout / masking conformance (ISSUE-10)
+# ======================================================================
+def _fa_rand(key, *shapes):
+    ks = jax.random.split(jax.random.PRNGKey(key), len(shapes))
+    return [jax.random.normal(k, s) for k, s in zip(ks, shapes)]
+
+
+def _fa_check(q, k, v, **kw):
+    from repro.kernels import flash_attention as fa
+    got = fa.flash_attention(q, k, v, interpret=True, **kw)
+    want = ref.flash_attention_ref(
+        q, k, v, causal=kw.get("causal", True),
+        q_offset=kw.get("q_offset") or 0, kv_len=kw.get("kv_len"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("G", [2, 4])
+def test_flash_attention_gqa_groups(G):
+    """Query row b reads kv row b // G — the GQA grid index map."""
+    BHkv, S, hd = 2, 96, 16
+    q, k, v = _fa_rand(G, (BHkv * G, S, hd), (BHkv, S, hd), (BHkv, S, hd))
+    _fa_check(q, k, v, bq=32, bk=32)
+
+
+def test_flash_attention_mla_vdim():
+    """MLA layout: v head dim != qk head dim (and ragged S)."""
+    BH, S, hd, hdv = 3, 70, 32, 24
+    q, k, v = _fa_rand(1, (BH, S, hd), (BH, S, hd), (BH, S, hdv))
+    _fa_check(q, k, v, bq=32, bk=32)
+
+
+@pytest.mark.parametrize("S", [130, 97, 8])
+def test_flash_attention_ragged_s(S):
+    """Ragged Sq/L pad to the tile in the wrapper; padded keys are masked
+    NEG_INF in-kernel and padded query rows sliced off (mirror of the
+    fused-MVM ragged-M sweep)."""
+    BH, hd = 2, 16
+    q, k, v = _fa_rand(S, (BH, S, hd), (BH, S, hd), (BH, S, hd))
+    _fa_check(q, k, v, bq=64, bk=64)
+
+
+def test_flash_attention_q_offset_chunk():
+    """Chunked-prefill masking: a 64-query chunk at absolute offset 192
+    attends causally against a 256-key cache."""
+    BH, hd, off, C, L = 2, 16, 192, 64, 256
+    q, k, v = _fa_rand(9, (BH, C, hd), (BH, L, hd), (BH, L, hd))
+    _fa_check(q, k, v, q_offset=off, bq=32, bk=32)
+
+
+def test_flash_attention_kv_len_masks_staged_garbage():
+    """kv_len truncation: keys beyond the staged fill are invisible even
+    when the capacity buffer holds garbage there."""
+    BH, hd, C, L = 2, 16, 32, 128
+    q, k, v = _fa_rand(11, (BH, C, hd), (BH, L, hd), (BH, L, hd))
+    kv_len = 64
+    got = None
+    from repro.kernels import flash_attention as fa
+    got = fa.flash_attention(q, k, v, q_offset=kv_len - C, kv_len=kv_len,
+                             bq=32, bk=32, interpret=True)
+    # poisoning the masked tail must not change the output
+    k2 = k.at[:, kv_len:].set(1e4)
+    v2 = v.at[:, kv_len:].set(-1e4)
+    got2 = fa.flash_attention(q, k2, v2, q_offset=kv_len - C,
+                              kv_len=kv_len, bq=32, bk=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+    _fa_check(q, k, v, q_offset=kv_len - C, kv_len=kv_len, bq=32, bk=32)
+
+
+def test_flash_attention_noncausal_ragged():
+    BH, Sq, L, hd = 2, 50, 70, 16
+    q, k, v = _fa_rand(13, (BH, Sq, hd), (BH, L, hd), (BH, L, hd))
+    _fa_check(q, k, v, causal=False, bq=32, bk=32)
+
+
+def test_flash_attention_traced_q_offset_one_trace():
+    """q_offset is a traced SMEM scalar: one jit serves every chunk
+    offset (the retrace-family contract chunked prefill relies on)."""
+    from repro.kernels import flash_attention as fa
+    BH, C, L, hd = 2, 32, 128, 16
+    q, k, v = _fa_rand(17, (BH, C, hd), (BH, L, hd), (BH, L, hd))
+    traces = []
+
+    @jax.jit
+    def f(q, k, v, off):
+        traces.append(1)
+        return fa.flash_attention(q, k, v, q_offset=off, bq=32, bk=32,
+                                  interpret=True)
+
+    for off in (0, 32, 96):
+        got = f(q, k, v, jnp.int32(off))
+        want = ref.flash_attention_ref(q, k, v, q_offset=off)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+    assert len(traces) == 1
+
+
+def test_flash_attention_default_blocks_platform():
+    """interpret mode wants few fat blocks (the XLA-loop per-step constant
+    dominates); TPU keeps MXU-native 128s."""
+    from repro.kernels.flash_attention import default_blocks
+    assert default_blocks(2048, 2048, True) == (1024, 1024)
+    assert default_blocks(2048, 2048, False) == (128, 128)
+    assert default_blocks(64, 40, True) == (64, 40)
+
+
+def test_tile_plan_prefill_rows():
+    """_fit_rows extends the adaptive plan to prefill widths: M <= cap
+    rounds to the sublane; bigger M takes the largest dividing tile in
+    (cap/2, cap] — and bm never changes numerics (fp32 accumulation order
+    is a bk property), so the bit-identity gates keep holding."""
+    from repro.kernels.photonic_mvm import tile_plan
+    assert tile_plan(2048, 512, 512) == (128, 512, 512)   # even full tiles
+    assert tile_plan(2048, 512, 512, cap_m=256) == (256, 512, 512)
+    assert tile_plan(192, 512, 512) == (96, 512, 512)     # largest divisor
+    assert tile_plan(200, 512, 512) == (128, 512, 512)    # none in range
+    # prior decode behaviour unchanged
+    assert tile_plan(2, 512, 1024) == (8, 512, 512)
+    assert tile_plan(130, 512, 512) == (128, 512, 512)

@@ -1,0 +1,252 @@
+"""Prefill megapath (ISSUE-10): flash under the Backend seam, chunked
+prefill through Program and ContinuousScheduler.
+
+Tier-1 fast subset: small models, flash engaged by lowering
+``flash_min_seq`` instead of growing S.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.core.backend import Backend
+from repro.models import transformer as tfm
+from repro.serve.batcher import Request
+from repro.serve.scheduler import ContinuousScheduler
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="llama", num_layers=2, d_model=128,
+                num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=97)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _build(cfg, execution):
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    return api.Program.build(cfg, params, execution=execution)
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9))
+
+
+# ======================================================================
+# Backend.attention dispatch
+# ======================================================================
+def test_use_flash_dispatch():
+    pho = Backend("photonic")
+    assert pho.use_flash(512) and pho.use_flash(2048)
+    assert not pho.use_flash(511)                  # below threshold
+    assert not Backend("xla").use_flash(4096)      # xla: einsum path
+    assert not Backend("photonic", flash=False).use_flash(4096)
+    low = Backend("photonic", flash_min_seq=64)
+    assert low.use_flash(64)
+
+
+@pytest.mark.parametrize("mla", [None,
+                                 MLAConfig(kv_lora_rank=32, qk_nope_dim=16,
+                                           qk_rope_dim=8, v_head_dim=24)])
+def test_program_prefill_flash_vs_einsum_parity(mla):
+    """The ISSUE-10 parity gate, tier-1 fast: the same photonic Program
+    prefilled through the flash kernel vs the einsum path it replaces
+    (same quantized matmuls — only the attention schedule differs) must
+    agree within the W8A8 tolerance 0.055.  GQA and MLA head layouts."""
+    cfg = _cfg(mla=mla)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    flash = api.Program.build(cfg, params, execution=Backend(
+        "photonic", flash_min_seq=64))
+    einsum = api.Program.build(cfg, params, execution=Backend(
+        "photonic", flash=False))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 96), 0, 97)
+    lg_f, _ = flash.prefill({"tokens": toks}, 112)
+    lg_e, _ = einsum.prefill({"tokens": toks}, 112)
+    assert _rel(lg_f, lg_e) <= 0.055
+
+
+def test_flash_matches_einsum_closely_same_quantization():
+    """Holding the backend fixed, flash vs einsum is an fp32 attention
+    reordering — agreement is much tighter than W8A8 (sanity that the
+    parity above is not hiding a layout bug)."""
+    cfg = _cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    flash = api.Program.build(cfg, params, execution=Backend(
+        "xla", flash_min_seq=64))
+    # xla Backend never takes the flash path (use_flash gates on photonic);
+    # route through the kernels directly at the model layer instead
+    from repro.models import attention as attn
+    B, S, H, hd = 2, 96, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, 2, hd))
+    v = jax.random.normal(ks[2], (B, S, 2, hd))
+    want = attn.attend_seq_xla(q, k, v, causal=True)
+    from repro.kernels import ops
+    got = ops.flash_attention(q, k, v, causal=True).reshape(B, S, H * hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    del flash  # built above to assert it constructs with the field set
+
+
+# ======================================================================
+# chunked prefill: Program level
+# ======================================================================
+@pytest.mark.parametrize("mla", [None,
+                                 MLAConfig(kv_lora_rank=32, qk_nope_dim=16,
+                                           qk_rope_dim=8, v_head_dim=24)])
+def test_prefill_chunked_bit_exact_on_xla(mla):
+    """Chunked == monolithic prefill, bitwise, on the xla Program — logits
+    at each row's own last index AND the caches a subsequent decode reads."""
+    prog = _build(_cfg(mla=mla), "xla")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 70), 0, 97)
+    last = jnp.array([69, 41], jnp.int32)
+    lg_m, c_m = prog.prefill({"tokens": toks}, 96, last=last)
+    lg_c, c_c = prog.prefill_chunked({"tokens": toks}, 96, 32, last=last)
+    np.testing.assert_array_equal(np.asarray(lg_m), np.asarray(lg_c))
+    nt = jnp.array([[5], [7]], jnp.int32)
+    d_m, _ = prog.decode(nt, c_m, last + 1)
+    d_c, _ = prog.decode(nt, c_c, last + 1)
+    np.testing.assert_array_equal(np.asarray(d_m), np.asarray(d_c))
+
+
+def test_prefill_chunked_photonic_within_tolerance():
+    """On photonic, per-chunk A8 activation scales legitimately differ from
+    whole-prompt scales — chunked agrees to W8A8 tolerance, not bitwise."""
+    prog = _build(_cfg(), "photonic")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 70), 0, 97)
+    lg_m, _ = prog.prefill({"tokens": toks}, 96)
+    lg_c, _ = prog.prefill_chunked({"tokens": toks}, 96, 32)
+    assert _rel(lg_c, lg_m) <= 0.15
+
+
+def test_prefill_chunk_one_trace_per_width():
+    """The retrace-family contract: chunk offset is traced, so every chunk
+    of every prompt at one (B, W, cache_len) shares a single jit."""
+    prog = _build(_cfg(), "xla")
+    before = api.TRACE_COUNTS["prefill_chunk"]
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 96), 0, 97)
+    caches = prog.empty_caches(1, 128)
+    for off in (0, 32, 64):
+        _, caches = prog.prefill_chunk(toks[:, off:off + 32], caches, off)
+    assert api.TRACE_COUNTS["prefill_chunk"] - before == 1
+
+
+def test_prefill_chunk_mode_rejects_non_attention():
+    """SSM (and any non-attention mixer) cannot resume a scan mid-prompt:
+    the transformer raises rather than silently corrupting state."""
+    from repro.configs.base import SSMConfig
+    cfg = _cfg(family="ssm", d_model=64, num_heads=2, num_kv_heads=2,
+               ssm=SSMConfig(d_state=8, head_dim=16, chunk=8))
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    prog = api.Program.build(cfg, params, execution="xla")
+    caches = prog.empty_caches(1, 64)
+    toks = jnp.zeros((1, 16), jnp.int32)
+    with pytest.raises(ValueError, match="attention mixers only"):
+        prog.prefill_chunk(toks, caches, 0)
+
+
+# ======================================================================
+# chunked prefill: scheduler level
+# ======================================================================
+def _mixed_requests(vocab, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=list(rng.integers(1, vocab, size=pl)),
+                    max_new=6)
+            for i, pl in enumerate([70, 20, 55, 33, 64, 5])]
+
+
+@pytest.mark.parametrize("execution", ["xla", "photonic"])
+def test_scheduler_chunked_token_identical(execution):
+    """The ISSUE-10 serving gate: chunked continuous serving emits exactly
+    the tokens the monolithic scheduler does (greedy)."""
+    prog = _build(_cfg(), execution)
+    mono = ContinuousScheduler(prog, capacity=4, max_len=96)
+    for r in _mixed_requests(97):
+        mono.submit(r)
+    want = {c.rid: c.tokens.tolist() for c in mono.drain()}
+    chk = ContinuousScheduler(prog, capacity=4, max_len=96,
+                              prefill_chunk=16)
+    for r in _mixed_requests(97):
+        chk.submit(r)
+    got = {c.rid: c.tokens.tolist() for c in chk.drain()}
+    assert got == want
+    assert chk.stats.prefill_chunks > 0
+    assert mono.stats.prefill_chunks == 0
+
+
+def test_scheduler_chunked_interleaves_decode():
+    """A long prefill must not stall in-flight decodes: while a chunked
+    prefill is staging, committed slots keep emitting one token per step."""
+    prog = _build(_cfg(), "xla")
+    sched = ContinuousScheduler(prog, capacity=4, max_len=128,
+                                prefill_chunk=16)
+    rng = np.random.default_rng(5)
+    sched.submit(Request(rid=0, prompt=list(rng.integers(1, 97, 8)),
+                         max_new=32))
+    sched.step()                      # short request admitted + decoding
+    short = sched.pool.slots[[i for i, s in enumerate(sched.pool.slots)
+                              if s is not None][0]]
+    gen0 = short.generated
+    sched.submit(Request(rid=1, prompt=list(rng.integers(1, 97, 80)),
+                         max_new=4))
+    steps_while_staging = 0
+    sched.step()                      # admits rid=1, first chunk
+    while sched._prefilling:
+        sched.step()
+        steps_while_staging += 1
+    # 80-token prompt at W=16 -> 5 chunks; the short slot decoded through
+    # every staging step instead of stalling for the whole prefill
+    assert steps_while_staging >= 3
+    assert short.generated - gen0 >= steps_while_staging
+    sched.drain()
+
+
+def test_scheduler_chunked_falls_back_for_ssm():
+    """Recurrent-state models keep the exact monolithic prefill (chunking
+    is attention-only); prefill_chunk set on such a model is a no-op."""
+    from repro.configs.base import SSMConfig
+    cfg = _cfg(family="ssm", d_model=64, num_heads=2, num_kv_heads=2,
+               ssm=SSMConfig(d_state=8, head_dim=16, chunk=8))
+    prog = _build(cfg, "xla")
+    sched = ContinuousScheduler(prog, capacity=2, max_len=96,
+                                prefill_chunk=16)
+    assert not sched._chunkable
+    rng = np.random.default_rng(5)
+    sched.submit(Request(rid=0, prompt=list(rng.integers(1, 97, 40)),
+                         max_new=3))
+    done = sched.drain()
+    assert len(done) == 1 and sched.stats.prefill_chunks == 0
+
+
+def test_scheduler_chunked_ttft_instrumented():
+    """TTFT fires when the final chunk lands (not at admission), and the
+    chunk spans land in the tracker histograms via prefill_chunks."""
+    from repro.obs.serving import ServingObs
+    cfg = _cfg()
+    prog = _build(cfg, "xla")
+    obs = ServingObs.create(cfg, trace=False)
+    sched = ContinuousScheduler(prog, capacity=2, max_len=128,
+                                prefill_chunk=32, telemetry=obs)
+    rng = np.random.default_rng(9)
+    sched.submit(Request(rid=0, prompt=list(rng.integers(1, 97, 100)),
+                         max_new=2))
+    sched.drain()
+    pct = obs.tracker.percentiles()
+    assert pct["ttft_ms"]["count"] == 1
+    assert sched.stats.prefill_chunks == 4      # ceil(100/32)
+    snap = obs.snapshot()
+    assert snap["counters"]["serve.requests.completed"] == 1
+
+
+def test_backend_jit_key_includes_flash_fields():
+    """flash/flash_min_seq participate in the static jit key (frozen
+    hashable Backend): flipping them is a retrace, not silent reuse."""
+    a = Backend("photonic")
+    b = dataclasses.replace(a, flash=False)
+    c = dataclasses.replace(a, flash_min_seq=64)
+    assert len({hash(a), hash(b), hash(c)}) == 3
